@@ -1,0 +1,27 @@
+"""Benchmark helpers: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import numpy as np
+
+Row = Tuple[str, float, str]   # (name, us_per_call, derived)
+
+
+def time_steps(fn: Callable, batches, warmup: int = 3) -> np.ndarray:
+    """Times fn(batch) per call (seconds), after warmup."""
+    for b in batches[:warmup]:
+        jax.block_until_ready(fn(b))
+    out = []
+    for b in batches[warmup:]:
+        t0 = time.time()
+        jax.block_until_ready(fn(b))
+        out.append(time.time() - t0)
+    return np.array(out)
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}", flush=True)

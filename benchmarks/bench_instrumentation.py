@@ -1,0 +1,73 @@
+"""Fig 8 — naive vs adaptive instrumentation cost.
+
+naive:    every batch runs the instrumented executable (the paper's
+          record-every-lookup strawman);
+adaptive: every Nth batch (executable-granularity sampling) — un-sampled
+          batches pay exactly zero;
+baseline: instrumentation disabled.
+
+The green stacked bars of Fig 8 correspond to the `+opt` rows: overhead
+is worth paying iff the optimizations it unlocks more than repay it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EngineConfig, MorpheusRuntime, SketchConfig
+from repro.serving import ServeConfig, build_params, build_tables, \
+    make_request_batch, make_serve_step
+
+from ._util import emit, time_steps
+
+
+def _make(sample_every, enable=True):
+    cfg = ServeConfig()
+    params = build_params(cfg, jax.random.PRNGKey(0))
+    for lp in params["layers"]:
+        bias = np.zeros(cfg.n_experts, np.float32)
+        bias[:3] = 6.0
+        lp["moe"]["b_router"] = jnp.asarray(bias)
+    tables = build_tables(cfg, jax.random.PRNGKey(0))
+    ecfg = EngineConfig(
+        sketch=SketchConfig(sample_every=sample_every, max_hot=4,
+                            hot_coverage=0.8),
+        features={"vision_enabled": False, "track_sessions": True},
+        moe_router_table="router")
+    rt = MorpheusRuntime(make_serve_step(cfg), tables, params,
+                         make_request_batch(cfg, jax.random.PRNGKey(0)),
+                         cfg=ecfg, enable=enable)
+    rt.controller.min_every = sample_every
+    rt.controller.max_every = sample_every     # pin the cadence
+    rt.controller.sample_every = sample_every
+    return cfg, rt
+
+
+def run(steps: int = 60) -> list:
+    rows = []
+    cfg = ServeConfig()
+    batches = [make_request_batch(cfg, jax.random.PRNGKey(i), 8, "low")
+               for i in range(steps)]
+
+    _, rt0 = _make(8, enable=False)
+    t0 = float(np.median(time_steps(rt0.step, batches)))
+    rows.append(("fig8/baseline", t0 * 1e6, "overhead_pct=0.0"))
+
+    for name, every in (("naive", 1), ("adaptive", 8)):
+        _, rt = _make(every)
+        t = float(np.median(time_steps(rt.step, batches)))
+        rows.append((f"fig8/{name}", t * 1e6,
+                     f"overhead_pct={100*(t-t0)/t0:.1f}"))
+        # ... and with the optimizations the instrumentation pays for
+        for b in batches[:16]:
+            rt.step(b)
+        rt.recompile(block=True)
+        t_opt = float(np.median(time_steps(rt.step, batches)))
+        rows.append((f"fig8/{name}+opt", t_opt * 1e6,
+                     f"net_gain_pct={100*(t0-t_opt)/t0:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

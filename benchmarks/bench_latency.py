@@ -1,0 +1,74 @@
+"""Fig 7 — p50/p99 latency: optimized path vs deopt (fallback) path.
+
+best case:  all traffic takes the specialized executable;
+worst case: the program-level guard routes every batch to the generic
+            executable (version mismatch held open) — the paper's
+            "all packets fall back to the default branch".
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EngineConfig, MorpheusRuntime, SketchConfig
+from repro.serving import ServeConfig, build_params, build_tables, \
+    make_request_batch, make_serve_step
+
+from ._util import emit
+
+
+def _lat(fn, batches):
+    out = []
+    for b in batches[3:]:
+        t0 = time.time()
+        jax.block_until_ready(fn(b))
+        out.append(time.time() - t0)
+    return np.array(out)
+
+
+def run(steps: int = 60) -> list:
+    cfg = ServeConfig()
+    params = build_params(cfg, jax.random.PRNGKey(0))
+    for lp in params["layers"]:
+        bias = np.zeros(cfg.n_experts, np.float32)
+        bias[:3] = 6.0
+        lp["moe"]["b_router"] = jnp.asarray(bias)
+    tables = build_tables(cfg, jax.random.PRNGKey(0))
+    ecfg = EngineConfig(
+        sketch=SketchConfig(sample_every=1000000, max_hot=4,
+                            hot_coverage=0.6),   # no instr during timing
+        features={"vision_enabled": False, "track_sessions": True},
+        moe_router_table="router")
+    rt = MorpheusRuntime(make_serve_step(cfg), tables, params,
+                         make_request_batch(cfg, jax.random.PRNGKey(0)),
+                         cfg=ecfg)
+    batches = [make_request_batch(cfg, jax.random.PRNGKey(i), 8, "high")
+               for i in range(steps)]
+    rt.controller.sample_every = 2
+    for b in batches[:16]:
+        rt.step(b)
+    rt.recompile(block=True)
+    rt.controller.sample_every = 10 ** 9
+    for b in batches[:6]:            # warm the specialized executable
+        rt.step(b)
+
+    rows = []
+    lat = _lat(rt.step, batches)            # optimized path
+    rows.append(("fig7/optimized/p50", np.percentile(lat, 50) * 1e6,
+                 f"p99_us={np.percentile(lat, 99)*1e6:.0f}"))
+
+    base = _lat(lambda b: rt.generic_exec(
+        rt.params, rt.table_state, rt.instr_state, rt.guards, b)[0],
+        batches)                            # forced deopt path
+    rows.append(("fig7/deopt/p50", np.percentile(base, 50) * 1e6,
+                 f"p99_us={np.percentile(base, 99)*1e6:.0f}"))
+    rows.append(("fig7/p99_reduction", 0.0,
+                 f"pct={100*(np.percentile(base,99)-np.percentile(lat,99))/np.percentile(base,99):.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,72 @@
+"""Fig 5 — throughput vs input-traffic locality.
+
+Three systems per trace:
+  baseline   statically compiled, no Morpheus;
+  eswitch    traffic-INDEPENDENT dynamic passes only (table elimination,
+             const-prop, DCE, dstruct) — the ESwitch re-implementation the
+             paper compares against;
+  morpheus   full pipeline including traffic-dependent passes (hot-expert
+             fast path, hot-row caches).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import EngineConfig, MorpheusRuntime, SketchConfig
+from repro.serving import ServeConfig, build_params, build_tables, \
+    make_request_batch, make_serve_step
+
+from ._util import Row, emit, time_steps
+
+
+def _runtime(mode: str, cfg: ServeConfig, params, steps_warm=10):
+    tables = build_tables(cfg, jax.random.PRNGKey(0))
+    if mode == "eswitch":
+        sketch = SketchConfig(hot_coverage=1.01)    # fastpath never fires
+        router = None
+    else:
+        sketch = SketchConfig(sample_every=4, max_hot=4, hot_coverage=0.8)
+        router = "router"
+    ecfg = EngineConfig(sketch=sketch,
+                        features={"vision_enabled": False,
+                                  "track_sessions": True},
+                        moe_router_table=router)
+    rt = MorpheusRuntime(make_serve_step(cfg), tables, params,
+                         make_request_batch(cfg, jax.random.PRNGKey(0)),
+                         cfg=ecfg, enable=(mode != "baseline"))
+    return rt
+
+
+def run(steps: int = 60) -> list:
+    cfg = ServeConfig()
+    params = build_params(cfg, jax.random.PRNGKey(0))
+    import jax.numpy as jnp
+    for lp in params["layers"]:      # domain-skewed router
+        bias = np.zeros(cfg.n_experts, np.float32)
+        bias[:3] = 6.0
+        lp["moe"]["b_router"] = jnp.asarray(bias)
+
+    rows: list = []
+    for locality in ("high", "low", "none"):
+        batches = [make_request_batch(cfg, jax.random.PRNGKey(i), 8,
+                                      locality=locality)
+                   for i in range(steps)]
+        for mode in ("baseline", "eswitch", "morpheus"):
+            rt = _runtime(mode, cfg, params)
+            # training window + one recompile, like the paper's timeline
+            for b in batches[:20]:
+                rt.step(b)
+            if mode != "baseline":
+                rt.recompile(block=True)
+            times = time_steps(rt.step, batches[20:])
+            rps = 8.0 / times.mean()
+            rows.append((f"fig5/{locality}/{mode}",
+                         times.mean() * 1e6,
+                         f"req_per_s={rps:.1f}"
+                         f";hot={rt.hot_experts()}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,94 @@
+"""Fig 2 + Fig 6 — cumulative pass ablation with program-size metrics.
+
+Stages (each includes everything before it):
+  0 generic           statically-compiled data plane
+  1 +table_elim       empty adapter bank removed
+  2 +const_prop       uniform sampling temperature inlined
+  3 +dce              vision branch pinned off (trace-time DCE)
+  4 +dstruct          small-table lookups -> one-hot MXU matmuls
+  5 +fastpath         hot-row caches on instrumented tables
+  6 +moe_hot          hot-expert dense fast path (branch injection)
+
+Derived column carries the Fig-6 analogue: jaxpr eqn count (instruction
+count) and compiled FLOPs from cost_analysis (per batch).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EngineConfig, MorpheusRuntime, SketchConfig
+from repro.core.specialize import SpecializationPlan
+from repro.serving import ServeConfig, build_params, build_tables, \
+    make_request_batch, make_serve_step
+
+from ._util import Row, emit, time_steps
+
+STAGES = [
+    ("generic", (), False, False),
+    ("+table_elim", ("eliminated",), False, False),
+    ("+const_prop", ("eliminated", "const_row", "inline_const"), False,
+     False),
+    ("+dce", ("eliminated", "const_row", "inline_const"), True, False),
+    ("+dstruct", ("eliminated", "const_row", "inline_const", "onehot"),
+     True, False),
+    ("+fastpath", ("eliminated", "const_row", "inline_const", "onehot",
+                   "hot_cache"), True, False),
+    ("+moe_hot", ("eliminated", "const_row", "inline_const", "onehot",
+                  "hot_cache"), True, True),
+]
+
+
+def run(steps: int = 40) -> list:
+    cfg = ServeConfig()
+    params = build_params(cfg, jax.random.PRNGKey(0))
+    for lp in params["layers"]:
+        bias = np.zeros(cfg.n_experts, np.float32)
+        bias[:3] = 6.0
+        lp["moe"]["b_router"] = jnp.asarray(bias)
+    tables = build_tables(cfg, jax.random.PRNGKey(0))
+    ecfg = EngineConfig(
+        sketch=SketchConfig(sample_every=2, max_hot=4, hot_coverage=0.7),
+        features={"vision_enabled": True, "track_sessions": True},
+        moe_router_table="router")
+    rt = MorpheusRuntime(make_serve_step(cfg), tables, params,
+                         make_request_batch(cfg, jax.random.PRNGKey(0)),
+                         cfg=ecfg)
+    batches = [make_request_batch(cfg, jax.random.PRNGKey(i), 8, "high")
+               for i in range(steps)]
+    for b in batches[:16]:
+        rt.step(b)
+    full_plan, _, _ = rt.engine.build_plan(rt.instr_state)
+
+    rows: list = []
+    args = (rt.params, rt.table_state, rt.instr_state, rt.guards,
+            batches[0])
+    for name, impls, dce, moe_hot in STAGES:
+        sites = tuple((sid, s) for sid, s in full_plan.sites
+                      if s.impl in impls)
+        flags = dict(full_plan.flags)
+        flags["vision_enabled"] = not dce
+        if not moe_hot:
+            flags.pop("__moe_hot__", None)
+        plan = SpecializationPlan(version=rt.tables.version, sites=sites,
+                                  flags=flags, label=name)
+        step = rt.engine.make_step_fn(plan)
+        jx = jax.make_jaxpr(step)(*args)
+        n_eqns = len(jx.jaxpr.eqns)
+        compiled = jax.jit(step).lower(*args).compile()
+        flops = (compiled.cost_analysis() or {}).get("flops", 0.0)
+        exe = lambda b: compiled(rt.params, rt.table_state,
+                                 rt.instr_state, rt.guards, b)[0]
+        times = time_steps(exe, batches)
+        rows.append((f"fig2/{name}", times.mean() * 1e6,
+                     f"req_per_s={8/times.mean():.1f};eqns={n_eqns}"
+                     f";flops={flops:.3g}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,66 @@
+"""Fig 11/12 analogue — the second backend.
+
+The paper ports Morpheus from eBPF to DPDK/FastClick to show the core is
+data-plane agnostic.  Our second backend is the TRAINING data plane: the
+same hot-expert branch-injection pass applied to a MoE train step
+(router distributions drift slowly across steps — control-plane-like),
+versus the statically compiled train step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.passes.branch_inject import moe_ffn_hotpath
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.moe import init_moe, moe_ffn_local, route
+from repro.models.params import Initializer, unzip
+
+from ._util import emit, time_steps
+
+
+def run(steps: int = 30) -> list:
+    moe = MoEConfig(num_experts=32, top_k=2, expert_d_ff=256)
+    cfg = ModelConfig(d_model=128, moe=moe)
+    ini = Initializer(jax.random.PRNGKey(0), dtype=jnp.float32)
+    params, _ = unzip(init_moe(ini, cfg))
+    bias = np.zeros(moe.num_experts, np.float32)
+    bias[:3] = 8.0
+    params["b_router"] = jnp.asarray(bias)
+
+    T = 2048
+    xs = [jax.random.normal(jax.random.PRNGKey(i), (T, cfg.d_model))
+          for i in range(steps)]
+
+    def loss_generic(p, x):
+        y, m = moe_ffn_local(p, x, moe)
+        return jnp.mean(y ** 2) + 0.01 * m["aux_loss"]
+
+    def loss_hot(p, x):
+        y, m = moe_ffn_hotpath(p, x, cfg, (0, 1, 2))
+        return jnp.mean(y ** 2) + 0.01 * m["aux_loss"]
+
+    g_gen = jax.jit(jax.grad(loss_generic))
+    g_hot = jax.jit(jax.grad(loss_hot))
+
+    # correctness first: identical grads when routing stays in the hot set
+    ggen = g_gen(params, xs[0])
+    ghot = g_hot(params, xs[0])
+    err = max(float(jnp.abs(a - b).max())
+              for a, b in zip(jax.tree.leaves(ggen), jax.tree.leaves(ghot)))
+
+    t_gen = time_steps(lambda x: g_gen(params, x), xs)
+    t_hot = time_steps(lambda x: g_hot(params, x), xs)
+    rows = [
+        ("fig11/train_generic", t_gen.mean() * 1e6,
+         f"tok_per_s={T/t_gen.mean():.0f}"),
+        ("fig11/train_hot_experts", t_hot.mean() * 1e6,
+         f"tok_per_s={T/t_hot.mean():.0f}"
+         f";speedup={t_gen.mean()/t_hot.mean():.2f}x;grad_err={err:.2e}"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

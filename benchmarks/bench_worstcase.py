@@ -1,0 +1,98 @@
+"""§6.5 — what can go wrong: the stateful worst case (NAT analogue).
+
+The session table is RW and written on every batch.  If the operator lets
+Morpheus instrument it and build a guarded fast path over hot sessions,
+the guard is invalidated by the very next write: the fast path never
+executes, but its guard + instrumentation costs remain, and each
+recompile churns the executable.  The fix is the paper's fix: the
+per-table opt-out (Table(instrument=False)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EngineConfig, MorpheusRuntime, SketchConfig
+from repro.serving import ServeConfig, build_params, build_tables, \
+    make_request_batch, make_serve_step
+
+from ._util import emit, time_steps
+
+
+def _rt(instrument_sessions: bool, enable=True):
+    cfg = ServeConfig()
+    params = build_params(cfg, jax.random.PRNGKey(0))
+    tables = build_tables(cfg, jax.random.PRNGKey(0),
+                          instrument_sessions=instrument_sessions)
+    ecfg = EngineConfig(
+        sketch=SketchConfig(sample_every=2, max_hot=4, hot_coverage=0.5),
+        features={"vision_enabled": False, "track_sessions": True},
+        moe_router_table=None)
+    rt = MorpheusRuntime(make_serve_step(cfg), tables, params,
+                         make_request_batch(cfg, jax.random.PRNGKey(0)),
+                         cfg=ecfg, enable=enable)
+    return cfg, rt
+
+
+def _run_with_churn(rt, batches, recompile_every=12, drift=True):
+    """Serve while recompiling on a background thread (the paper runs the
+    compiler on a second core; here it steals cycles from the same core,
+    which is the worst case of the worst case).  ``drift``: rotate the
+    hot session slots so each cycle plans a DIFFERENT hot set — the plan
+    cache never hits and the compiler churns (the NAT pathology)."""
+    import time as _t
+    cfg = ServeConfig()
+    lat = []
+    for i, b in enumerate(batches):
+        if drift:
+            # session churn ONLY (the NAT pathology): class/token traffic
+            # stays stationary, the hot session set rotates
+            b = make_request_batch(cfg, jax.random.PRNGKey(10000 + i), 8,
+                                   "low", hot_slots=6,
+                                   slot_offset=7 * (i // 12))
+        t0 = _t.time()
+        jax.block_until_ready(rt.step(b))
+        lat.append(_t.time() - t0)
+        if rt.enable and (i + 1) % recompile_every == 0:
+            rt.recompile(block=False)
+    return np.array(lat[4:])
+
+
+def run(steps: int = 100) -> list:
+    rows = []
+    cfg = ServeConfig()
+    batches = [make_request_batch(cfg, jax.random.PRNGKey(i), 8, "low",
+                                  hot_slots=6)
+               for i in range(steps)]
+
+    _, rt0 = _rt(False, enable=False)
+    t0 = _run_with_churn(rt0, batches).mean()
+    rows.append(("worstcase/baseline", t0 * 1e6, "delta_pct=0.0"))
+
+    # RW session table instrumented => guarded fast path that every step
+    # invalidates + plan churn => continuous background compiles
+    _, rt_bad = _rt(True)
+    for b in batches[:12]:
+        rt_bad.step(b)
+    rt_bad.recompile(block=True)
+    t_bad = _run_with_churn(rt_bad, batches).mean()
+    guarded = any(s.guarded for _, s in rt_bad.plan.sites)
+    rows.append(("worstcase/instrumented_rw", t_bad * 1e6,
+                 f"delta_pct={100*(t_bad-t0)/t0:.1f};guarded={guarded}"
+                 f";recompiles={rt_bad.stats.recompiles}"))
+
+    # the paper's fix: per-table opt-out
+    _, rt_ok = _rt(False)
+    for b in batches[:12]:
+        rt_ok.step(b)
+    rt_ok.recompile(block=True)
+    t_ok = _run_with_churn(rt_ok, batches).mean()
+    rows.append(("worstcase/opt_out", t_ok * 1e6,
+                 f"delta_pct={100*(t_ok-t0)/t0:.1f}"
+                 f";recompiles={rt_ok.stats.recompiles}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,21 @@
+"""Lower + compile any assigned architecture for the production mesh and
+print its roofline terms — the per-cell engine behind EXPERIMENTS.md.
+
+    PYTHONPATH=src python examples/multiarch_dryrun.py \
+        --arch llama3-8b --shape decode_32k [--multi-pod]
+"""
+import argparse
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", args.arch, "--shape", args.shape]
+    if args.multi_pod:
+        cmd.append("--multi-pod")
+    sys.exit(subprocess.call(cmd))

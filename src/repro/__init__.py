@@ -1,0 +1,9 @@
+"""Morpheus-JAX: dynamic recompilation of JAX data planes.
+
+The paper's primary contribution lives in ``repro.core`` (tables, static
+analysis, adaptive instrumentation, optimization passes, guards, engine,
+runtime dispatcher).  Substrates: ``models`` (the 10 assigned
+architectures), ``kernels`` (Pallas TPU), ``distributed`` (sharding rules
++ fault tolerance), ``optim``/``data``/``checkpoint``, ``serving`` (the
+Katran-analogue data plane), ``launch`` (mesh, dry-run, train, serve).
+"""

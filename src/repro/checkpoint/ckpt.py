@@ -1,0 +1,134 @@
+"""Checkpointing: atomic, async-capable, reshard-on-restore.
+
+Layout:  <dir>/step_<N>/
+            manifest.json       tree structure + dtypes + shapes + meta
+            arrays.npz          flattened leaves keyed by path
+
+Writes go to ``<dir>/.tmp_<N>`` and are renamed into place — a crashed
+writer never corrupts the latest checkpoint (rename is atomic on POSIX).
+``save_async`` snapshots to host memory synchronously (consistent view)
+and writes on a daemon thread so the train loop is not blocked.
+
+Restore takes an optional target sharding tree: leaves are device_put
+against the NEW mesh, so a checkpoint taken on one mesh restores onto a
+resized mesh (elastic scaling / failure recovery with fewer pods).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree, meta: Optional[Dict] = None
+         ) -> str:
+    ckpt_dir = Path(ckpt_dir)
+    tmp = ckpt_dir / f".tmp_{step}"
+    final = ckpt_dir / f"step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    flat = _flatten(tree)
+    host = {k: np.asarray(v) for k, v in flat.items()}
+    treedef = jax.tree_util.tree_structure(tree)
+    manifest = {
+        "step": step,
+        "meta": meta or {},
+        "treedef": str(treedef),
+        "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                 for k, v in host.items()},
+        "time": time.time(),
+    }
+    # npz cannot round-trip ml_dtypes (bf16 loads as void): store a
+    # same-width integer view; restore views back via the manifest dtype
+    store = {}
+    for k, v in host.items():
+        if v.dtype.kind not in "fiub" or str(v.dtype) == "bfloat16":
+            v = v.view(np.uint16 if v.dtype.itemsize == 2 else np.uint8)
+        store[k] = v
+    np.savez(tmp / "arrays.npz", **store)
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return str(final)
+
+
+def save_async(ckpt_dir: str, step: int, tree, meta: Optional[Dict] = None
+               ) -> threading.Thread:
+    """Snapshot device state synchronously, write on a daemon thread."""
+    host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+    th = threading.Thread(target=save,
+                          args=(ckpt_dir, step, host_tree, meta),
+                          daemon=True)
+    th.start()
+    return th
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in d.glob("step_*")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: Optional[int], example_tree,
+            shardings=None) -> tuple:
+    """Returns (tree, meta).  ``example_tree`` provides the structure;
+    ``shardings`` (same structure, NamedSharding leaves) reshards onto the
+    current mesh — checkpoints survive mesh resizes."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    d = Path(ckpt_dir) / f"step_{step}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    arrays = np.load(d / "arrays.npz")
+
+    flat_keys = list(_flatten(example_tree).keys())
+    missing = [k for k in flat_keys if k not in arrays]
+    if missing:
+        raise KeyError(f"checkpoint missing leaves: {missing[:5]}...")
+
+    leaves_by_key = {k: arrays[k] for k in flat_keys}
+    flat_shard = _flatten(shardings) if shardings is not None else {}
+
+    import ml_dtypes
+
+    def rebuild(path, leaf):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = leaves_by_key[key]
+        saved_dtype = manifest["keys"][key]["dtype"]
+        if str(arr.dtype) != saved_dtype:
+            # stored as an integer view of an ml_dtypes array
+            arr = arr.view(getattr(ml_dtypes, saved_dtype))
+        want_dtype = leaf.dtype if hasattr(leaf, "dtype") else arr.dtype
+        if str(arr.dtype) != str(want_dtype):
+            arr = jnp.asarray(arr).astype(want_dtype)
+        sh = flat_shard.get(key)
+        if sh is not None:
+            return jax.device_put(np.asarray(arr), sh)
+        return jnp.asarray(arr)
+
+    tree = jax.tree_util.tree_map_with_path(rebuild, example_tree)
+    return tree, manifest["meta"] | {"step": manifest["step"]}

@@ -1,0 +1,7 @@
+# Morpheus core: dynamic recompilation of JAX data planes.
+from .ctx import DataPlaneCtx
+from .engine import EngineConfig, MorpheusEngine
+from .instrument import AdaptiveController, SketchConfig
+from .runtime import MorpheusRuntime, RuntimeStats
+from .specialize import GENERIC_PLAN, SiteSpec, SpecializationPlan
+from .tables import Table, TableSet

@@ -1,0 +1,86 @@
+"""DataPlaneCtx — what the step function sees.
+
+User data-plane code (serving step, train step) is written against this
+context instead of raw arrays:
+
+    def serve_step(params, ctx, batch):
+        cls = ctx.lookup("req_class", batch["class_id"])
+        if ctx.flag("vision_enabled"):
+            ...
+        ctx.update("sessions", batch["slot"], {...})
+
+The ctx carries the active SpecializationPlan (trace-time!), the table
+device state, the instrumentation sketches and the RW guards; lookups
+dispatch through the plan and fold instrumentation in when this trace is
+the instrumented variant.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import instrument, tables as T
+from .specialize import dispatch_lookup
+
+
+class DataPlaneCtx:
+    def __init__(self, plan, table_state: Dict[str, Dict[str, jax.Array]],
+                 instr_state: Dict[str, Dict[str, jax.Array]],
+                 guards: Dict[str, jax.Array],
+                 sketch_cfg: instrument.SketchConfig):
+        self.plan = plan
+        self.table_state = dict(table_state)
+        self.instr_state = dict(instr_state)
+        self.guards = dict(guards)
+        self.sketch_cfg = sketch_cfg
+
+    # ---- data-plane API ---------------------------------------------------
+    def lookup(self, name: str, idx: jax.Array,
+               fields: Optional[Tuple[str, ...]] = None):
+        site_id = T._register(name, "lookup", fields or ())
+        if (self.plan is not None and self.plan.instrumented
+                and site_id in self.instr_state):
+            self.instr_state[site_id] = instrument.record(
+                self.instr_state[site_id], idx, self.sketch_cfg)
+        return dispatch_lookup(self.plan, site_id, name, self.table_state,
+                               idx, fields, self.guards)
+
+    def lookup_or_none(self, name: str, idx: jax.Array,
+                       fields: Optional[Tuple[str, ...]] = None):
+        """Like lookup, but when the plan marks this site ELIMINATED
+        (empty table, §4.3.1) returns None at trace time — the caller's
+        whole branch drops out of the jaxpr, exactly like the paper
+        removing the lookup call from the datapath."""
+        site_id = T._register(name, "lookup", fields or ())
+        spec = self.plan.site(site_id) if self.plan is not None else None
+        if spec is not None and spec.impl == "eliminated":
+            return None
+        if (self.plan is not None and self.plan.instrumented
+                and site_id in self.instr_state):
+            self.instr_state[site_id] = instrument.record(
+                self.instr_state[site_id], idx, self.sketch_cfg)
+        return dispatch_lookup(self.plan, site_id, name, self.table_state,
+                               idx, fields, self.guards)
+
+    def update(self, name: str, idx: jax.Array,
+               values: Dict[str, jax.Array]) -> None:
+        T._register(name, "update")
+        state = dict(self.table_state[name])
+        for k, v in values.items():
+            state[k] = state[k].at[idx].set(v.astype(state[k].dtype))
+        self.table_state[name] = state
+        if name in self.guards:
+            # invalidate the site guard in the same step (§4.3.6)
+            self.guards[name] = jnp.ones_like(self.guards[name])
+
+    def flag(self, name: str, default: bool = True):
+        site_id = T._register(name, "flag")
+        plan_flags = getattr(self.plan, "flags", None) or {}
+        if name in plan_flags:
+            return plan_flags[name]       # trace-time constant -> DCE
+        return default
+
+    def outputs(self):
+        return self.table_state, self.instr_state, self.guards

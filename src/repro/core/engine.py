@@ -1,0 +1,159 @@
+"""The Morpheus compilation pipeline (§4, Fig. 3).
+
+    analyze (offline, once)  ->  read instrumentation  ->  plan passes
+    ->  trace + XLA-compile the specialized executable  ->  hand to the
+    runtime for the atomic swap.
+
+Timing mirrors Table 3: ``t1`` = analysis + table/sketch read + pass
+planning; ``t2`` = trace + XLA compile of the specialized executable.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from . import instrument
+from .ctx import DataPlaneCtx
+from .instrument import SketchConfig
+from .passes import plan_moe_fastpath, plan_sites
+from .passes.dead_code import plan_flags
+from .specialize import GENERIC_PLAN, SpecializationPlan
+from .tables import TableSet, analysis_sites, analyzing, \
+    reset_site_counters
+
+
+@dataclass
+class EngineConfig:
+    sketch: SketchConfig = field(default_factory=SketchConfig)
+    features: Dict[str, bool] = field(default_factory=dict)
+    moe_router_table: Optional[str] = None   # table backing MoE routing
+
+
+class MorpheusEngine:
+    """Plans and compiles specialized executables for one data plane."""
+
+    def __init__(self, user_step: Callable, tables: TableSet,
+                 cfg: Optional[EngineConfig] = None):
+        self.user_step = user_step
+        self.tables = tables
+        self.cfg = cfg or EngineConfig()
+        self.sites = []
+        self.mutability: Dict[str, str] = {}
+        self._analyzed = False
+
+    # ---- §4.1 static code analysis ---------------------------------------
+    def analyze(self, params, example_batch) -> Dict[str, Any]:
+        t0 = time.time()
+        table_state = self.tables.device_state()
+        instr_state = {}
+        guards = {}
+
+        def traced(p, b):
+            reset_site_counters()
+            ctx = DataPlaneCtx(GENERIC_PLAN, table_state, instr_state,
+                               guards, self.cfg.sketch)
+            out = self.user_step(p, ctx, b)
+            return out
+
+        with analyzing():
+            jax.eval_shape(traced, params, example_batch)
+        self.sites = analysis_sites()
+
+        # RO/RW classification: any in-plane update => RW; explicit table
+        # annotation wins.
+        written = {s.table for s in self.sites if s.kind == "update"}
+        for name, t in self.tables.tables.items():
+            if t.mutability != "auto":
+                self.mutability[name] = t.mutability
+            else:
+                self.mutability[name] = "rw" if name in written else "ro"
+        self._analyzed = True
+        return {"n_sites": len(self.sites),
+                "mutability": dict(self.mutability),
+                "analyze_s": time.time() - t0}
+
+    # ---- state plumbing ----------------------------------------------------
+    def instrumented_sites(self):
+        out = []
+        for s in self.sites:
+            if s.kind != "lookup":
+                continue
+            t = self.tables[s.table]
+            if t.instrument and t.n_valid > t.max_inline:
+                out.append(s.site_id)
+        return out
+
+    def init_instr_state(self):
+        return {sid: instrument.init_site_state(self.cfg.sketch)
+                for sid in self.instrumented_sites()}
+
+    def init_guards(self):
+        import jax.numpy as jnp
+        return {name: jnp.zeros((1,), jnp.int32)
+                for name, mut in self.mutability.items() if mut == "rw"}
+
+    # ---- §4.2 + §4.3: read instrumentation, run passes ---------------------
+    def build_plan(self, instr_state, instrumented: bool = False
+                   ) -> Tuple[SpecializationPlan, float, Dict]:
+        assert self._analyzed
+        t0 = time.time()
+        snapshot = self.tables.snapshot()
+        hot_stats = {}
+        hot_by_table = {}
+        for sid, st in (instr_state or {}).items():
+            hot, cov, total = instrument.hot_keys(st, self.cfg.sketch)
+            hot_stats[sid] = (hot, cov)
+            hot_by_table[sid.split("#")[0]] = (hot, cov)
+
+        specs, stats = plan_sites(self.sites, snapshot, self.mutability,
+                                  hot_stats, self.cfg.sketch)
+        flags = plan_flags(self.cfg.features)
+
+        moe_hot = None
+        if self.cfg.moe_router_table in hot_by_table:
+            hot, cov = hot_by_table[self.cfg.moe_router_table]
+            moe_hot = plan_moe_fastpath(hot, cov, self.cfg.sketch)
+        if moe_hot is not None:
+            flags = dict(flags)
+            flags["__moe_hot__"] = moe_hot
+
+        plan = SpecializationPlan(
+            version=self.tables.version,
+            sites=tuple(sorted(specs.items())),
+            flags=flags,
+            instrumented=instrumented,
+            label="specialized" + ("+instr" if instrumented else ""),
+        )
+        return plan, time.time() - t0, stats
+
+    def generic_plan(self, instrumented: bool = False) -> SpecializationPlan:
+        return SpecializationPlan(
+            version=self.tables.version, sites=(),
+            flags={}, instrumented=instrumented,
+            label="generic" + ("+instr" if instrumented else ""))
+
+    # ---- step-function construction + compile ------------------------------
+    def make_step_fn(self, plan: SpecializationPlan) -> Callable:
+        def step(params, table_state, instr_state, guards, batch):
+            reset_site_counters()
+            ctx = DataPlaneCtx(plan, table_state, instr_state, guards,
+                               self.cfg.sketch)
+            out = self.user_step(params, ctx, batch)
+            ts, ins, gs = ctx.outputs()
+            return out, ts, ins, gs
+        return step
+
+    def compile(self, plan: SpecializationPlan, params, table_state,
+                instr_state, guards, batch) -> Tuple[Callable, float]:
+        """AOT compile; returns (callable executable, t2 seconds)."""
+        t0 = time.time()
+        step = self.make_step_fn(plan)
+        jitted = jax.jit(step)
+        lowered = jitted.lower(params, table_state, instr_state, guards,
+                               batch)
+        compiled = lowered.compile()
+        return compiled, time.time() - t0

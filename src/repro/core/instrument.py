@@ -1,0 +1,146 @@
+"""Adaptive instrumentation (§4.2).
+
+Per (table x call-site) we keep an in-graph sketch:
+
+  * a count-min sketch (rows x width, int32) — heavy-hitter frequency
+    estimates without per-key state;
+  * a candidate ring buffer of recently-seen keys — the engine estimates
+    frequencies only for candidates (an LRU-cache stand-in that is
+    TPU-friendly: fixed shape, scatter writes).
+
+Adaptation dimensions from the paper:
+  size      — tables under ``max_inline`` are unconditionally specialized;
+              the engine never instruments them (dimension 1);
+  dynamics  — sampling: only every Nth batch runs the *instrumented*
+              executable, so un-sampled batches pay exactly zero overhead
+              (dimension 2 — sampled at executable granularity, which is
+              the TPU-native improvement over per-packet sampling);
+  locality  — sketches live per-device under shard_map and are psum-merged
+              only when the engine reads them (dimensions 3+4);
+  context   — one sketch per call site, not per table (dimension 5);
+  opt-out   — Table(instrument=False) (dimension 6).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SketchConfig:
+    rows: int = 4
+    width: int = 512
+    candidates: int = 128
+    sample_every: int = 8        # instrumented-executable cadence
+    hot_coverage: float = 0.90   # traffic share the hot set must cover
+    max_hot: int = 8             # fast-path cache size
+
+
+_PRIMES = np.array([1000003, 999983, 999979, 999961, 998244353,
+                    1000000007, 1000000021, 1000000033], np.int64)
+
+
+def init_site_state(cfg: SketchConfig) -> Dict[str, jax.Array]:
+    return {
+        "cms": jnp.zeros((cfg.rows, cfg.width), jnp.int32),
+        "cand": jnp.full((cfg.candidates,), -1, jnp.int32),
+        "ptr": jnp.zeros((), jnp.int32),
+        "total": jnp.zeros((), jnp.int32),
+    }
+
+
+def _hash(keys: jax.Array, row: int, width: int) -> jax.Array:
+    # uint32 multiplicative hash (wraparound is the point)
+    p = jnp.uint32(_PRIMES[row % len(_PRIMES)] & 0xFFFFFFFF)
+    h = keys.astype(jnp.uint32) * p + jnp.uint32(row * 7919)
+    return (h % jnp.uint32(width)).astype(jnp.int32)
+
+
+def record(state: Dict[str, jax.Array], keys: jax.Array,
+           cfg: SketchConfig) -> Dict[str, jax.Array]:
+    """In-graph: fold this step's looked-up keys into the sketch.
+    keys: int32 array (any shape), -1 entries ignored."""
+    keys = keys.reshape(-1).astype(jnp.int32)
+    valid = keys >= 0
+    cms = state["cms"]
+    for r in range(cms.shape[0]):
+        h = _hash(keys, r, cms.shape[1])
+        upd = jnp.where(valid, 1, 0).astype(jnp.int32)
+        cms = cms.at[r, h].add(upd)
+    n = keys.shape[0]
+    ptr = state["ptr"]
+    cand_n = state["cand"].shape[0]
+    pos = (ptr + jnp.arange(n, dtype=jnp.int32)) % cand_n
+    cand = state["cand"].at[pos].set(
+        jnp.where(valid, keys, state["cand"][pos]))
+    return {"cms": cms, "cand": cand,
+            "ptr": (ptr + n) % cand_n,
+            "total": state["total"] + valid.sum().astype(jnp.int32)}
+
+
+def estimate(state: Dict[str, jax.Array], keys: jax.Array) -> jax.Array:
+    """Count-min point estimates for ``keys``."""
+    cms = state["cms"]
+    est = None
+    for r in range(cms.shape[0]):
+        h = _hash(keys, r, cms.shape[1])
+        e = cms[r, h]
+        est = e if est is None else jnp.minimum(est, e)
+    return est
+
+
+def merge(states: List[Dict[str, jax.Array]]) -> Dict[str, jax.Array]:
+    """Global scope (§4.2 dim 4): combine per-device/per-replica sketches."""
+    out = dict(states[0])
+    for s in states[1:]:
+        out["cms"] = out["cms"] + s["cms"]
+        out["total"] = out["total"] + s["total"]
+        out["cand"] = jnp.concatenate([out["cand"], s["cand"]])
+    return out
+
+
+def hot_keys(state: Dict[str, jax.Array], cfg: SketchConfig
+             ) -> Tuple[np.ndarray, float, int]:
+    """Host-side (engine) heavy-hitter extraction.
+
+    Returns (hot keys sorted by estimated frequency, coverage fraction,
+    total samples)."""
+    cand = np.unique(np.asarray(state["cand"]))
+    cand = cand[cand >= 0]
+    total = int(state["total"])
+    if len(cand) == 0 or total == 0:
+        return np.array([], np.int32), 0.0, total
+    est = np.asarray(estimate(state, jnp.asarray(cand)))
+    order = np.argsort(-est)
+    cand, est = cand[order], est[order]
+    top = cand[: cfg.max_hot]
+    coverage = float(est[: cfg.max_hot].sum()) / max(total, 1)
+    return top.astype(np.int32), min(coverage, 1.0), total
+
+
+@dataclass
+class AdaptiveController:
+    """Adjusts the sampling cadence (§6.2/Fig 9): back off when the hot
+    set is stable, speed up on churn."""
+    cfg: SketchConfig
+    min_every: int = 2
+    max_every: int = 64
+
+    def __post_init__(self):
+        self.sample_every = self.cfg.sample_every
+        self._last_hot: Dict[str, Tuple[int, ...]] = {}
+
+    def observe(self, site_id: str, hot: np.ndarray) -> None:
+        key = tuple(int(x) for x in hot)
+        if self._last_hot.get(site_id) == key:
+            self.sample_every = min(self.sample_every * 2, self.max_every)
+        else:
+            self.sample_every = max(self.min_every, self.sample_every // 2)
+        self._last_hot[site_id] = key
+
+    def should_sample(self, step: int) -> bool:
+        return step % self.sample_every == 0

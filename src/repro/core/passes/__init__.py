@@ -1,0 +1,15 @@
+"""Morpheus optimization passes (§4.3, Table 2).
+
+Each pass proposes a per-site decision given (table snapshot, mutability,
+instrumentation stats).  ``plan_sites`` composes them in priority order:
+
+  table elimination > inline JIT > constant propagation >
+  data-structure specialization > traffic-dependent fast path.
+
+Guard elision (§4.3.6) runs last and decorates the chosen impls.
+Dead-code elimination (flags) and branch injection (MoE fast path) operate
+at the plan level, see ``dead_code.py`` / ``branch_inject.py``.
+"""
+from .branch_inject import plan_moe_fastpath
+from .compose import plan_sites
+from .dead_code import plan_flags

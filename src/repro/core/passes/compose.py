@@ -1,0 +1,72 @@
+"""Pass composition: table snapshot + stats -> per-site SiteSpecs."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from ..instrument import SketchConfig
+from ..specialize import SiteSpec
+from ..tables import CallSite, Table
+from .const_prop import propose_const_row
+from .dstruct import propose_dstruct
+from .fastpath import propose_fastpath
+from .guard_elision import apply_guard_elision
+from .table_jit import propose_eliminate, propose_inline
+
+
+def plan_sites(sites, tables: Dict[str, Table],
+               mutability: Dict[str, str],
+               hot_stats: Dict[str, tuple],
+               cfg: SketchConfig
+               ) -> Tuple[Dict[str, SiteSpec], Dict[str, int]]:
+    """sites: list[CallSite]; hot_stats: site_id -> (hot_keys, coverage).
+    Returns (site_id -> SiteSpec or None, pass statistics)."""
+    chosen: Dict[str, Tuple[str, Optional[SiteSpec]]] = {}
+    stats = {"eliminated": 0, "inlined": 0, "const_row": 0,
+             "fastpath": 0, "onehot": 0, "generic": 0}
+
+    for site in sites:
+        if site.kind != "lookup":
+            continue
+        table = tables[site.table]
+        mut = mutability.get(site.table, "rw")
+
+        spec = propose_eliminate(table)
+        if spec is not None:
+            stats["eliminated"] += 1
+            chosen[site.site_id] = (mut, spec)
+            continue
+
+        spec = propose_inline(table, mut)
+        if spec is not None:
+            stats["inlined"] += 1
+            chosen[site.site_id] = (mut, spec)
+            continue
+
+        spec = propose_const_row(table, mut)
+        if spec is not None:
+            stats["const_row"] += 1
+            chosen[site.site_id] = (mut, spec)
+            continue
+
+        hot, coverage = hot_stats.get(site.site_id,
+                                      (np.array([], np.int32), 0.0))
+        spec = propose_fastpath(table, mut, hot, coverage, cfg)
+        if spec is not None:
+            stats["fastpath"] += 1
+            chosen[site.site_id] = (mut, spec)
+            continue
+
+        spec = propose_dstruct(table, mut)
+        if spec is not None:
+            stats["onehot"] += 1
+            chosen[site.site_id] = (mut, spec)
+            continue
+
+        stats["generic"] += 1
+        chosen[site.site_id] = (mut, None)
+
+    specs, guard_stats = apply_guard_elision(chosen)
+    stats.update(guard_stats)
+    return {k: v for k, v in specs.items() if v is not None}, stats

@@ -1,0 +1,14 @@
+"""Dead code elimination via control-plane feature flags (§4.3.3).
+
+Feature flags are RO control-plane state (stored on the TableSet).  The
+plan pins every flag to its current value; ``ctx.flag`` then returns a
+Python bool at trace time, so the untaken branch never enters the jaxpr —
+the paper's "no QUIC VIPs => remove the QUIC branch", with the program-
+level guard (dispatcher version check) protecting the assumption."""
+from __future__ import annotations
+
+from typing import Dict
+
+
+def plan_flags(features: Dict[str, bool]) -> Dict[str, bool]:
+    return dict(features)

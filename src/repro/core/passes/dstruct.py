@@ -1,0 +1,48 @@
+"""Data-structure specialization (§4.3.4), TPU cost model.
+
+Chooses the lookup implementation for tables that stay generic:
+
+  gather      — HBM row gather: latency-bound, ~rows x row_bytes traffic
+  onehot      — one-hot matmul on the MXU: T x N x d FLOPs, streaming reads
+
+On TPU a gather of T rows costs ~T random HBM transactions; a one-hot
+matmul streams the whole table once and runs at MXU rate.  For small N the
+matmul wins decisively (the "LPM -> exact-match cache" effect translated to
+the memory hierarchy that TPUs actually have).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from ..specialize import SiteSpec
+from ..tables import Table
+
+MXU_FLOPS = 197e12          # bf16
+HBM_BW = 819e9
+GATHER_TXN_BYTES = 512      # effective bytes per random access
+
+
+def lookup_cost(table: Table, impl: str, n_queries: int) -> float:
+    row_bytes = sum(np.asarray(v[0]).nbytes for v in table.fields.values())
+    n = max(table.n_valid, 1)
+    if impl == "gather":
+        txns = n_queries * max(1, row_bytes // GATHER_TXN_BYTES + 1)
+        return txns * GATHER_TXN_BYTES / HBM_BW
+    if impl == "onehot":
+        flops = 2.0 * n_queries * n * (row_bytes / 2)   # bf16 elements
+        stream = n * row_bytes / HBM_BW
+        return flops / MXU_FLOPS + stream
+    raise ValueError(impl)
+
+
+def propose_dstruct(table: Table, mutability: str,
+                    n_queries: int = 1024) -> Optional[SiteSpec]:
+    if table.n_valid == 0:
+        return None
+    g = lookup_cost(table, "gather", n_queries)
+    o = lookup_cost(table, "onehot", n_queries)
+    if o < g:
+        return SiteSpec(impl="onehot")
+    return None

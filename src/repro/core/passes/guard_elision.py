@@ -1,0 +1,35 @@
+"""Guard elision (§4.3.6).
+
+Every specialized site theoretically needs a consistency guard.  Morpheus
+collapses all control-plane guards into ONE program-level version check in
+the dispatcher (zero in-graph cost) and keeps in-graph guards only where
+the data plane itself can invalidate the specialization — RW tables.
+
+This pass decorates chosen SiteSpecs with ``guarded`` and reports how many
+guards were elided (the saving is measured in benchmarks/bench_passes)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+from ..specialize import SiteSpec
+
+
+def apply_guard_elision(site_specs: Dict[str, Tuple[str, SiteSpec]]
+                        ) -> Tuple[Dict[str, SiteSpec], Dict[str, int]]:
+    """site_specs: site_id -> (mutability, spec).  Returns (decorated
+    specs, stats)."""
+    out = {}
+    stats = {"guards_kept": 0, "guards_elided": 0}
+    for sid, (mut, spec) in site_specs.items():
+        if spec is None:
+            out[sid] = None
+            continue
+        if mut == "rw" and spec.impl in ("hot_cache",):
+            out[sid] = dataclasses.replace(spec, guarded=True)
+            stats["guards_kept"] += 1
+        else:
+            # RO: the dispatcher's program-level version check covers it
+            out[sid] = dataclasses.replace(spec, guarded=False)
+            stats["guards_elided"] += 1
+    return out, stats

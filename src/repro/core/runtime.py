@@ -1,0 +1,186 @@
+"""Morpheus runtime: dispatcher, program-level guard, atomic update (§4.4).
+
+The runtime owns the executables and plays the role of the eBPF
+``BPF_PROG_ARRAY`` swap:
+
+  * **program-level guard**: one host-side version compare per step — if
+    the control plane touched any table since the active plan was built,
+    traffic routes to the *generic* executable until the background
+    recompile lands (deoptimization without data-plane disruption);
+  * **adaptive instrumentation**: every Nth step runs the instrumented
+    twin of the current executable (N adapted by the controller) — all
+    other steps pay zero instrumentation cost;
+  * **atomic update**: recompilation happens on a background thread;
+    control-plane updates arriving mid-compile are queued and replayed
+    after the swap; the swap itself is a Python reference assignment.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from .engine import EngineConfig, MorpheusEngine
+from .instrument import AdaptiveController
+from .specialize import SpecializationPlan
+from .tables import TableSet
+
+
+@dataclass
+class RuntimeStats:
+    steps: int = 0
+    deopt_steps: int = 0          # routed to generic by the program guard
+    instr_steps: int = 0
+    recompiles: int = 0
+    swaps: int = 0
+    queued_updates: int = 0
+    t1_history: List[float] = field(default_factory=list)
+    t2_history: List[float] = field(default_factory=list)
+    swap_history: List[float] = field(default_factory=list)
+    pass_stats: Dict[str, int] = field(default_factory=dict)
+
+
+class MorpheusRuntime:
+    def __init__(self, user_step: Callable, tables: TableSet, params,
+                 example_batch, cfg: Optional[EngineConfig] = None,
+                 enable: bool = True):
+        self.engine = MorpheusEngine(user_step, tables, cfg)
+        self.tables = tables
+        self.params = params
+        self.enable = enable
+        self.stats = RuntimeStats()
+        self.controller = AdaptiveController(self.engine.cfg.sketch)
+
+        self.analysis = self.engine.analyze(params, example_batch)
+        self.table_state = tables.device_state()
+        self.instr_state = self.engine.init_instr_state()
+        self.guards = self.engine.init_guards()
+
+        self._execs: Dict[Any, Callable] = {}
+        self._lock = threading.Lock()
+        self._compiling = False
+        self._queued: List[tuple] = []
+
+        # generic + generic-instrumented executables (always available)
+        self.generic_plan = self.engine.generic_plan()
+        self.generic_exec = self._get_exec(self.generic_plan, example_batch)
+        self.generic_instr_exec = self._get_exec(
+            self.engine.generic_plan(instrumented=True), example_batch)
+        self.plan = self.generic_plan
+        self.exec = self.generic_exec
+        self.instr_exec = self.generic_instr_exec
+        self._example_batch = example_batch
+
+    # ------------------------------------------------------------------
+    def _get_exec(self, plan: SpecializationPlan, batch) -> Callable:
+        key = plan.key
+        if key not in self._execs:
+            compiled, t2 = self.engine.compile(
+                plan, self.params, self.table_state, self.instr_state,
+                self.guards, batch)
+            self.stats.t2_history.append(t2)
+            self._execs[key] = compiled
+        return self._execs[key]
+
+    # ---- the data plane entry point ----------------------------------
+    def step(self, batch):
+        self.stats.steps += 1
+        # program-level guard: ONE host compare covers every RO table
+        if self.tables.version != self.plan.version:
+            exec_, plan = self.generic_exec, self.generic_plan
+            self.stats.deopt_steps += 1
+        elif self.enable and self.controller.should_sample(self.stats.steps):
+            exec_, plan = self.instr_exec, self.plan
+            self.stats.instr_steps += 1
+        else:
+            exec_, plan = self.exec, self.plan
+
+        out, ts, ins, gs = exec_(self.params, self.table_state,
+                                 self.instr_state, self.guards, batch)
+        self.table_state, self.instr_state, self.guards = ts, ins, gs
+        return out
+
+    # ---- control plane -------------------------------------------------
+    def control_update(self, name: str, fields, n_valid=None) -> None:
+        """Queued while a compile is in flight (§4.4), else applied now."""
+        with self._lock:
+            if self._compiling:
+                self._queued.append((name, fields, n_valid))
+                self.stats.queued_updates += 1
+                return
+        self._apply_update(name, fields, n_valid)
+
+    def _apply_update(self, name, fields, n_valid):
+        self.tables.control_update(name, fields, n_valid)
+        # refresh device copy of that table; program guard now deopts
+        self.table_state = dict(self.table_state)
+        self.table_state[name] = self.tables[name].device_arrays()
+
+    def set_feature(self, name: str, value: bool) -> None:
+        self.engine.cfg.features[name] = value
+        self.tables.version += 1        # flags are control-plane state
+
+    # ---- recompilation ---------------------------------------------------
+    def recompile(self, block: bool = True) -> Optional[dict]:
+        """Run one Morpheus compilation cycle (§4.4).  block=False runs on
+        a background thread — the data plane keeps executing the old code
+        meanwhile."""
+        if not self.enable:
+            return None
+        if block:
+            return self._recompile_now()
+        with self._lock:
+            if self._compiling:
+                return None            # one in-flight compile at a time
+            self._compiling = True
+        th = threading.Thread(target=self._recompile_now, daemon=True)
+        th.start()
+        return None
+
+    def _recompile_now(self) -> dict:
+        with self._lock:
+            self._compiling = True
+        try:
+            plan, t1, pass_stats = self.engine.build_plan(self.instr_state)
+            self.stats.t1_history.append(t1)
+            self.stats.pass_stats = pass_stats
+            instr_plan = SpecializationPlan(
+                version=plan.version, sites=plan.sites, flags=plan.flags,
+                instrumented=True, label=plan.label + "+instr")
+            new_exec = self._get_exec(plan, self._example_batch)
+            new_instr = self._get_exec(instr_plan, self._example_batch)
+
+            # update hot-set stability -> adapt sampling cadence
+            for sid, st in self.instr_state.items():
+                from . import instrument
+                hot, cov, _ = instrument.hot_keys(st, self.engine.cfg.sketch)
+                self.controller.observe(sid, hot)
+
+            t0 = time.time()
+            with self._lock:
+                # ATOMIC swap (the BPF_PROG_ARRAY pointer update)
+                self.plan, self.exec, self.instr_exec = \
+                    plan, new_exec, new_instr
+                # reset sketch window + revalidate RW guards for the new code
+                self.instr_state = self.engine.init_instr_state()
+                self.guards = self.engine.init_guards()
+                self._compiling = False
+                queued, self._queued = self._queued, []
+            self.stats.swap_history.append(time.time() - t0)
+            self.stats.recompiles += 1
+            self.stats.swaps += 1
+            for (name, fields, n_valid) in queued:   # replay (§4.4)
+                self._apply_update(name, fields, n_valid)
+            return {"t1": t1, "pass_stats": pass_stats,
+                    "plan": plan.label, "n_sites": len(plan.sites)}
+        finally:
+            with self._lock:
+                self._compiling = False
+
+    # ---- introspection -----------------------------------------------------
+    def hot_experts(self):
+        return (self.plan.flags or {}).get("__moe_hot__")

@@ -1,0 +1,153 @@
+"""SpecializationPlan + lookup dispatch.
+
+The plan is the engine's output: per call site, which implementation to
+trace.  It is HASHABLE — the runtime caches one compiled executable per
+distinct plan (the TPU analogue of Morpheus' generated machine code:
+trace-time constants specialize the jaxpr, XLA folds and DCEs, and the
+executable is swapped atomically by the dispatcher).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops as kops
+
+
+@dataclass(frozen=True)
+class SiteSpec:
+    impl: str = "gather"       # gather | onehot | hot_cache | inline_const
+                               # | const_row | eliminated
+    hot_keys: Tuple[int, ...] = ()
+    guarded: bool = False      # RW site guard (guard elision decides)
+    const_fields: Tuple[Tuple[str, Any], ...] = ()   # const-prop per field
+    inline_fields: Tuple[Tuple[str, Any], ...] = ()  # full inlined content
+
+
+@dataclass(frozen=True)
+class SpecializationPlan:
+    version: int = -1                                # TableSet version
+    sites: Tuple[Tuple[str, SiteSpec], ...] = ()
+    flags: Any = None                                # dict site_id -> bool
+    instrumented: bool = False
+    label: str = "generic"
+
+    def site(self, site_id: str) -> Optional[SiteSpec]:
+        for sid, spec in self.sites:
+            if sid == site_id:
+                return spec
+        return None
+
+    @property
+    def key(self):
+        return (self.version, self.sites,
+                tuple(sorted((self.flags or {}).items())),
+                self.instrumented)
+
+
+GENERIC_PLAN = SpecializationPlan(flags={})
+
+
+def _gather(table_state, idx, fields):
+    names = fields or tuple(table_state.keys())
+    return {f: jnp.take(table_state[f], idx, axis=0) for f in names}
+
+
+def _onehot(table_state, idx, fields, n_valid: int):
+    """Small-table lookup as a one-hot matmul — data-structure
+    specialization (§4.3.4) adapted to the MXU: for tables of tens of
+    rows, compute beats HBM gather latency on TPU."""
+    names = fields or tuple(table_state.keys())
+    out = {}
+    for f in names:
+        t = table_state[f][:n_valid]
+        if jnp.issubdtype(t.dtype, jnp.floating) and t.ndim >= 2:
+            oh = jax.nn.one_hot(idx, n_valid, dtype=t.dtype)
+            out[f] = jnp.einsum("tv,v...->t...", oh, t)
+        else:
+            out[f] = jnp.take(t, jnp.clip(idx, 0, n_valid - 1), axis=0)
+    return out
+
+
+def _hot_cache(table_state, idx, fields, hot_keys_arr):
+    """Fast-path cache (§4.3.1): heavy-hitter rows served from a small
+    VMEM-resident copy (Pallas ``hot_gather`` on TPU), cold rows from the
+    full HBM table.  Semantics identical to a plain gather."""
+    names = fields or tuple(table_state.keys())
+    hot_ids = jnp.asarray(hot_keys_arr, jnp.int32)
+    out = {}
+    for f in names:
+        t = table_state[f]
+        if t.ndim >= 2 and jnp.issubdtype(t.dtype, jnp.floating):
+            hot_rows = jnp.take(t, hot_ids, axis=0)
+            flat_idx = idx.reshape(-1)
+            res = kops.hot_gather(t, hot_rows, hot_ids, flat_idx)
+            out[f] = res.reshape(*idx.shape, *t.shape[1:])
+        else:
+            out[f] = jnp.take(t, idx, axis=0)
+    return out
+
+
+def dispatch_lookup(plan, site_id: str, name: str, table_state, idx,
+                    fields, guards):
+    state = table_state[name]
+    spec = plan.site(site_id) if plan is not None else None
+    if spec is None or spec.impl == "gather":
+        return _gather(state, idx, fields)
+
+    if spec.impl == "eliminated":
+        # empty table (§4.3.1 table elimination): defaults, no memory touch
+        names = fields or tuple(state.keys())
+        out = {}
+        for f in names:
+            t = state[f]
+            shape = idx.shape + t.shape[1:]
+            const = (spec.const_fields and dict(spec.const_fields).get(f))
+            if const is not None:
+                out[f] = jnp.broadcast_to(jnp.asarray(const, t.dtype), shape)
+            else:
+                out[f] = jnp.zeros(shape, t.dtype)
+        return out
+
+    if spec.impl == "inline_const":
+        # whole table baked into the executable as trace-time constants —
+        # XLA constant-folds; protected by the program-level guard.
+        names = fields or tuple(state.keys())
+        inline = dict(spec.inline_fields)
+        const_state = {f: jnp.asarray(inline[f]) for f in names}
+        n_valid = len(next(iter(inline.values())))
+        return _onehot(const_state, idx, names, n_valid)
+
+    if spec.impl == "const_row":
+        # every live row identical -> constant propagation (§4.3.2):
+        # the lookup result does not depend on idx at all.
+        names = fields or tuple(state.keys())
+        consts = dict(spec.const_fields)
+        out = {}
+        for f in names:
+            t = state[f]
+            val = jnp.asarray(consts[f], t.dtype)
+            out[f] = jnp.broadcast_to(val, idx.shape + t.shape[1:])
+        return out
+
+    if spec.impl == "hot_cache":
+        fast = lambda: _hot_cache(state, idx, fields,
+                                  np.asarray(spec.hot_keys, np.int32))
+        if spec.guarded and guards is not None and name in guards:
+            # RW site guard: fall back to the plain gather once the data
+            # plane has written the table (deoptimization, §4.3.6)
+            ok = guards[name][0] == 0
+            return jax.lax.cond(ok, fast, lambda: _gather(state, idx,
+                                                          fields))
+        return fast()
+
+    if spec.impl == "onehot":
+        t0 = next(iter(state.values()))
+        n_valid = int(t0.shape[0])
+        return _onehot(state, idx, fields, n_valid)
+
+    raise ValueError(f"unknown impl {spec.impl!r} for site {site_id}")

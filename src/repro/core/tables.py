@@ -1,0 +1,211 @@
+"""Match-action tables for JAX data planes.
+
+The paper's *maps* (§4.1).  A :class:`Table` is a named, fixed-capacity,
+dict-of-field-arrays lookup structure living in device memory, consulted by
+the step function ("data plane") and mutated either by the host ("control
+plane": config pushes, adapter uploads, backend changes) or — for RW tables
+— by the step function itself (session/KV state, the `conn_table`
+analogue).
+
+Model/serving code never indexes the arrays directly; it calls
+:func:`lookup` / :func:`update` / :func:`flag`, which
+
+  * register the *call site* in the analysis registry while tracing
+    (signature-based call-site analysis, §4.1),
+  * dispatch to the implementation chosen by the active
+    SpecializationPlan (gather / one-hot-matmul / VMEM hot-cache /
+    inlined constant / eliminated), and
+  * record instrumentation when the active executable is the
+    instrumented variant (§4.2).
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Table:
+    """Host-side descriptor.  ``fields`` maps field name -> np/jnp array of
+    shape (capacity, ...).  ``n_valid`` rows are live."""
+    name: str
+    fields: Dict[str, np.ndarray]
+    n_valid: int
+    mutability: str = "auto"          # "ro" | "rw" | "auto" (from analysis)
+    instrument: bool = True           # operator opt-out (§4.2 dim 6)
+    max_inline: int = 16              # small-table JIT threshold (§4.3.1)
+    default: Optional[Dict[str, Any]] = None   # miss values
+
+    @property
+    def capacity(self) -> int:
+        return next(iter(self.fields.values())).shape[0]
+
+    def device_arrays(self) -> Dict[str, jax.Array]:
+        return {k: jnp.asarray(v) for k, v in self.fields.items()}
+
+    def snapshot(self) -> "Table":
+        return Table(self.name, {k: np.array(v) for k, v in
+                                 self.fields.items()},
+                     self.n_valid, self.mutability, self.instrument,
+                     self.max_inline, self.default)
+
+
+class TableSet:
+    """All tables of a data plane + the control-plane version counter.
+
+    Every host-side mutation bumps ``version`` — the program-level guard
+    (§4.3.6) compares it against the version the specialized executable
+    was compiled for."""
+
+    def __init__(self, tables: List[Table]):
+        self.tables: Dict[str, Table] = {t.name: t for t in tables}
+        self.version = 0
+        self._lock = threading.Lock()
+        self._update_log: List[Tuple[str, int]] = []
+
+    def __getitem__(self, name: str) -> Table:
+        return self.tables[name]
+
+    def control_update(self, name: str, fields: Dict[str, np.ndarray],
+                       n_valid: Optional[int] = None) -> int:
+        """Control-plane write: replaces field contents, bumps version."""
+        with self._lock:
+            t = self.tables[name]
+            for k, v in fields.items():
+                arr = np.array(t.fields[k])
+                arr[: len(v)] = v
+                t.fields[k] = arr
+            if n_valid is not None:
+                t.n_valid = n_valid
+            self.version += 1
+            self._update_log.append((name, self.version))
+            return self.version
+
+    def device_state(self) -> Dict[str, Dict[str, jax.Array]]:
+        return {n: t.device_arrays() for n, t in self.tables.items()}
+
+    def snapshot(self) -> Dict[str, Table]:
+        with self._lock:
+            return {n: t.snapshot() for n, t in self.tables.items()}
+
+
+# ---------------------------------------------------------------------------
+# Call-site registry (filled during analysis tracing)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CallSite:
+    table: str
+    site_id: str
+    kind: str                       # "lookup" | "update" | "flag"
+    fields: Tuple[str, ...] = ()
+
+
+class _AnalysisContext(threading.local):
+    def __init__(self):
+        self.active = False
+        self.sites: List[CallSite] = []
+        self.counters: Dict[str, int] = {}
+
+
+_CTX = _AnalysisContext()
+
+
+def _register(table: str, kind: str, fields=()) -> str:
+    n = _CTX.counters.get(table, 0)
+    _CTX.counters[table] = n + 1
+    site_id = f"{table}#{n}"
+    if _CTX.active:
+        _CTX.sites.append(CallSite(table, site_id, kind, tuple(fields)))
+    return site_id
+
+
+def analysis_sites():
+    return list(_CTX.sites)
+
+
+class analyzing:
+    """Context manager: record call sites while tracing the step fn."""
+
+    def __enter__(self):
+        _CTX.active = True
+        _CTX.sites = []
+        _CTX.counters = {}
+        return self
+
+    def __exit__(self, *a):
+        _CTX.active = False
+        return False
+
+
+def reset_site_counters():
+    """Call before each trace so site ids are stable across traces."""
+    _CTX.counters = {}
+
+
+# ---------------------------------------------------------------------------
+# Data-plane API: lookup / update / flag
+# ---------------------------------------------------------------------------
+
+# The active specialization plan (installed by the runtime around tracing).
+_ACTIVE_PLAN = threading.local()
+
+
+def get_active_plan():
+    return getattr(_ACTIVE_PLAN, "plan", None)
+
+
+def set_active_plan(plan) -> None:
+    _ACTIVE_PLAN.plan = plan
+
+
+def lookup(table_state: Dict[str, jax.Array], name: str, idx: jax.Array,
+           fields: Optional[Tuple[str, ...]] = None,
+           guards: Optional[Dict[str, jax.Array]] = None
+           ) -> Dict[str, jax.Array]:
+    """Look up rows ``idx`` (int array) in table ``name``.
+
+    Dispatches through the active SpecializationPlan; the generic
+    implementation is a plain gather per field."""
+    from .specialize import dispatch_lookup
+    site_id = _register(name, "lookup", fields or ())
+    plan = get_active_plan()
+    return dispatch_lookup(plan, site_id, name, table_state, idx,
+                           fields, guards)
+
+
+def update(table_state: Dict[str, jax.Array], name: str, idx: jax.Array,
+           values: Dict[str, jax.Array],
+           guards: Optional[Dict[str, jax.Array]] = None):
+    """Data-plane write (RW tables).  Returns (new_table_state, new_guards):
+    the site guard for this table is invalidated in-graph — the paper's
+    ``map_update_elem`` pre-handler."""
+    site_id = _register(name, "update")
+    new_fields = dict(table_state)
+    for k, v in values.items():
+        new_fields[k] = table_state[k].at[idx].set(
+            v.astype(table_state[k].dtype))
+    new_guards = guards
+    if guards is not None and name in guards:
+        new_guards = dict(guards)
+        new_guards[name] = jnp.ones_like(guards[name])  # 1 = invalidated
+    return new_fields, new_guards
+
+
+def flag(name: str, value_if_unplanned: bool = True) -> Any:
+    """Control-plane feature flag consulted at TRACE time.
+
+    When the active plan pins the flag (RO, protected by the program-level
+    guard) this returns a Python bool — the untaken branch never enters the
+    jaxpr (dead-code elimination, §4.3.3).  Unplanned flags return the
+    conservative default."""
+    site_id = _register(name, "flag")
+    plan = get_active_plan()
+    if plan is not None and site_id in plan.flags:
+        return plan.flags[site_id]
+    return value_if_unplanned

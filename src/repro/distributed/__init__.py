@@ -1,0 +1,1 @@
+from .meshctx import MeshPolicy, get_policy, set_policy, use_policy

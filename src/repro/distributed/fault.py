@@ -1,0 +1,84 @@
+"""Fault tolerance: failure injection, straggler mitigation, elastic resize.
+
+On a real pod these hooks bind to the cluster manager (preemption
+notices, ICI link errors, host heartbeats).  The policy layer is the
+contribution here; the container runs it against *simulated* events so the
+recovery paths are exercised end-to-end in CI:
+
+  * ``FailureInjector`` — deterministic or probabilistic step failures
+    (SIGKILL-equivalent: the train driver exits mid-step and must resume
+    from the latest atomic checkpoint).
+  * ``StragglerMonitor`` — per-step wall-time tracking; a step slower than
+    ``threshold x`` the rolling median marks the node suspect; after
+    ``patience`` suspect steps the mitigation callback fires (on a real
+    cluster: demote/replace the host, shrink the data axis — here: the
+    elastic-resize path below).
+  * Elastic resize = checkpoint -> rebuild mesh with the new shape ->
+    restore with the new sharding tree (checkpoint/ckpt.py reshards on
+    device_put).  ``elastic_reshard`` is the one-call version.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclass
+class FailureInjector:
+    fail_at_step: Optional[int] = None
+    fail_prob: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def check(self, step: int) -> None:
+        if self.fail_at_step is not None and step == self.fail_at_step:
+            raise SimulatedFailure(f"injected failure at step {step}")
+        if self.fail_prob and self._rng.random() < self.fail_prob:
+            raise SimulatedFailure(f"random failure at step {step}")
+
+
+@dataclass
+class StragglerMonitor:
+    threshold: float = 2.0
+    patience: int = 3
+    window: int = 32
+    on_straggler: Optional[Callable[[int, float], None]] = None
+
+    def __post_init__(self):
+        self._times = deque(maxlen=self.window)
+        self._suspect = 0
+        self.events = []
+
+    def observe(self, step: int, seconds: float) -> bool:
+        """Returns True when mitigation fired for this step."""
+        fired = False
+        if len(self._times) >= 8:
+            med = float(np.median(self._times))
+            if seconds > self.threshold * med:
+                self._suspect += 1
+                self.events.append((step, seconds, med))
+                if self._suspect >= self.patience:
+                    fired = True
+                    self._suspect = 0
+                    if self.on_straggler:
+                        self.on_straggler(step, seconds)
+            else:
+                self._suspect = max(0, self._suspect - 1)
+        self._times.append(seconds)
+        return fired
+
+
+def elastic_reshard(ckpt_dir: str, example_tree, new_shardings):
+    """Resume a checkpoint onto a different mesh (fewer/more pods)."""
+    from ..checkpoint import restore
+    return restore(ckpt_dir, None, example_tree, shardings=new_shardings)

@@ -1,0 +1,98 @@
+"""Mesh policy context.
+
+Model code is written against *logical* parallelism (batch axes, a model/
+tensor axis, an optional sequence axis).  The launcher installs a
+:class:`MeshPolicy`; with no policy installed every module uses its pure
+single-device path (smoke tests, unit tests).
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+
+
+@dataclass(frozen=True)
+class MeshPolicy:
+    mesh: Optional[jax.sharding.Mesh] = None
+    batch_axes: Tuple[str, ...] = ("data",)   # activations' batch sharding
+    model_axis: str = "model"                 # TP / EP / head sharding
+    fsdp_axis: Optional[str] = "data"         # weight-dim sharding (ZeRO-3)
+    seq_axis: Optional[str] = None            # KV/SSM sequence sharding
+    rules: Optional[dict] = None              # logical->mesh axis rules
+    # which implementation decode attention / MoE dispatch use:
+    decode_attn_impl: str = "auto_spmd"       # "auto_spmd" | "shard_map"
+    moe_impl: str = "auto"                    # "auto": shard_map iff mesh
+
+    @property
+    def n_model(self) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def n_batch_shards(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.batch_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+
+_CURRENT: Optional[MeshPolicy] = None
+
+# Morpheus hot-expert plan for the TRAINING backend: when set (a tuple of
+# expert ids), moe_ffn traces the branch-injected fast path (dense over
+# the hot experts, lax.cond fallback to the full dispatch on miss).  The
+# train driver re-jits with a new plan when router statistics drift —
+# the same trace-time specialization + executable swap as the serving
+# runtime, applied to the second data plane.
+_MOE_HOT: Optional[tuple] = None
+
+
+def get_moe_hot() -> Optional[tuple]:
+    return _MOE_HOT
+
+
+def set_moe_hot(hot: Optional[tuple]) -> None:
+    global _MOE_HOT
+    _MOE_HOT = tuple(hot) if hot else None
+
+
+def get_policy() -> Optional[MeshPolicy]:
+    return _CURRENT
+
+
+def set_policy(p: Optional[MeshPolicy]) -> None:
+    global _CURRENT
+    _CURRENT = p
+
+
+@contextlib.contextmanager
+def use_policy(p: Optional[MeshPolicy]):
+    prev = get_policy()
+    set_policy(p)
+    try:
+        yield p
+    finally:
+        set_policy(prev)
+
+
+def constrain(x: jax.Array, logical_axes: Tuple[Optional[str], ...]):
+    """Apply a sharding constraint derived from the installed policy's
+    rules.  No-op without a policy — model code can sprinkle these freely
+    (the MaxText activation-constraint pattern); without them XLA's
+    propagation loses batch sharding through scanned layers and replicates
+    the remat residuals (measured: 449 GB/device on mamba2 train before
+    this was added)."""
+    pol = get_policy()
+    if pol is None or pol.mesh is None or pol.rules is None:
+        return x
+    from jax.sharding import NamedSharding
+    from .sharding import spec_for
+    spec = spec_for(tuple(logical_axes), pol.rules, pol.mesh, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(pol.mesh, spec))

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot-spots, each with a pure-jnp
+oracle in ref.py and a backend-dispatching wrapper in ops.py:
+
+  hot_gather       Morpheus' fast-path table cache (VMEM hot rows +
+                   DMA-elided HBM fallback via scalar prefetch)
+  flash_attention  blocked attention (causal/window/softcap/GQA)
+  ssd_scan         Mamba2 SSD chunked scan with VMEM-carried state
+"""
+from . import ops, ref

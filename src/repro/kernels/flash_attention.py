@@ -1,0 +1,130 @@
+"""Blocked (flash) attention as a Pallas TPU kernel.
+
+Grid (B, H, n_q, n_k), k innermost: the running (max, sumexp, acc) live in
+VMEM scratch across the sequential k dimension — O(blk_q x blk_k) live
+logits instead of O(Sq x Sk).  Supports causal masking, sliding windows
+(gemma2 local layers), logit softcap, and GQA (kv head = h // group).
+
+Block shapes are MXU-aligned: blk_q x blk_k = 128 x 128 tiles by default,
+head_dim padded by the caller to a lane multiple.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: Optional[int],
+            softcap: float, blk_q: int, blk_k: int, sk: int, n_k: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :]                   # (blk_q, D)
+    k = k_ref[0, :, 0, :]                   # (blk_k, D)
+    v = v_ref[0, :, 0, :]
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    q_pos = iq * blk_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (blk_q, blk_k), 0)
+    k_pos = ik * blk_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (blk_q, blk_k), 1)
+    mask = k_pos < sk                        # kv padding
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= q_pos - k_pos < window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_scr[:, :1]                    # (blk_q, 1)
+    row_max = jnp.max(logits, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, row_max)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)
+    p = jnp.where(mask, p, 0.0)
+    l_new = l_scr[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha + pv
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[:, :1], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "logit_softcap",
+                              "blk_q", "blk_k", "interpret"))
+def flash_attention_kernel(q, k, v, *, causal: bool = True,
+                           window: Optional[int] = None,
+                           logit_softcap: float = 0.0,
+                           blk_q: int = 128, blk_k: int = 128,
+                           interpret: bool = False):
+    """q: (B, Sq, H, D); k, v: (B, Sk, Hkv, D) -> (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+
+    blk_q = min(blk_q, max(Sq, 1))
+    blk_k = min(blk_k, max(Sk, 1))
+    pq = (-Sq) % blk_q
+    pk = (-Sk) % blk_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    Sq_p, Sk_p = Sq + pq, Sk + pk
+    n_q, n_k = Sq_p // blk_q, Sk_p // blk_k
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        softcap=logit_softcap, blk_q=blk_q, blk_k=blk_k, sk=Sk, n_k=n_k)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, 1, D),
+                         lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, blk_k, 1, D),
+                         lambda b, h, iq, ik: (b, ik, h // G, 0)),
+            pl.BlockSpec((1, blk_k, 1, D),
+                         lambda b, h, iq, ik: (b, ik, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, 1, D),
+                               lambda b, h, iq, ik: (b, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq_p, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, LANES), jnp.float32),
+            pltpu.VMEM((blk_q, LANES), jnp.float32),
+            pltpu.VMEM((blk_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq]

@@ -1,0 +1,241 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import: jax locks the device count on first
+#   initialization.  The placeholder host devices exist ONLY here — smoke
+#   tests and benchmarks see the single real CPU device.
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCH_IDS, SHAPES, applies, batch_specs, cache_dims, \
+    get_config
+from ..distributed.meshctx import MeshPolicy, use_policy
+from ..distributed.sharding import batch_shardings, make_rules, \
+    shardings_for, tree_device_bytes
+from ..models.model import Model
+from ..models.params import unzip
+from ..optim.adamw import AdamWConfig
+from ..optim import init_opt_state
+from . import hlo_analysis
+from .mesh import make_production_mesh
+from .steps import make_decode_step, make_train_step
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _values(tree_pspec):
+    vals, _ = unzip(tree_pspec)
+    return vals
+
+
+def active_params(params_pspec, cfg) -> float:
+    """Parameter count weighted by activation fraction (MoE experts count
+    at top_k/num_experts)."""
+    from ..models.params import is_pspec
+    total = 0.0
+    leaves = jax.tree.leaves(params_pspec, is_leaf=is_pspec)
+    frac = 1.0
+    if cfg.moe is not None:
+        frac = cfg.moe.top_k / cfg.moe.num_experts
+    for p in leaves:
+        n = float(np.prod(p.value.shape))
+        if "experts" in p.axes:
+            total += n * frac
+        else:
+            total += n
+    return total
+
+
+def model_flops(cfg, shape, n_active: float) -> float:
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: one token / seq
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save_hlo: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind}
+
+    skip = applies(cfg, shape)
+    if skip:
+        rec.update(status="skipped", reason=skip)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    # FSDP for training always; at inference only when TP alone can't fit
+    # the weights in 16 GB HBM.
+    fsdp = shape.kind == "train" or cfg.name in ("deepseek-v2-236b",)
+    rules = make_rules(multi_pod, fsdp=fsdp)
+    policy = MeshPolicy(mesh=mesh, batch_axes=batch_axes, rules=rules)
+
+    model = Model(cfg)
+    params_pspec = model.init(None, abstract=True)
+    n_active = active_params(params_pspec, cfg)
+    rec["n_active_params"] = n_active
+    rec["model_flops_global"] = model_flops(cfg, shape, n_active)
+
+    t0 = time.time()
+    with use_policy(policy), mesh:
+        params_sh = shardings_for(params_pspec, mesh, rules)
+        params_sds = _values(params_pspec)
+        b_specs = batch_specs(cfg, shape)
+        b_sh = batch_shardings(b_specs, mesh, rules)
+
+        if shape.kind == "train":
+            opt_pspec = init_opt_state(params_pspec, abstract=True)
+            state_sds = {"params": params_sds, "opt": _values(opt_pspec)}
+            state_sh = {"params": params_sh,
+                        "opt": shardings_for(opt_pspec, mesh, rules)}
+            # gradient accumulation: keep remat residuals under ~3 GB/chip
+            n_batch_shards = 1
+            for a in batch_axes:
+                n_batch_shards *= mesh.shape[a]
+            b_local = shape.global_batch // n_batch_shards
+            resid = (cfg.n_layers * b_local * shape.seq_len *
+                     cfg.d_model * 2)
+            K = 1
+            while resid / K > 3e9 and K < b_local:
+                K *= 2
+            rec["microbatches"] = K
+            rec["memory_model"] = {
+                "params_bytes": tree_device_bytes(params_pspec, mesh, rules),
+                "opt_bytes": tree_device_bytes(opt_pspec, mesh, rules),
+                "residual_bytes": resid // K,
+            }
+            step = make_train_step(model, AdamWConfig(), microbatches=K,
+                                   grad_shardings=params_sh)
+            jitted = jax.jit(step, in_shardings=(state_sh, b_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_sds, b_specs)
+        else:
+            B, cap, enc_cap = cache_dims(cfg, shape)
+            cache_pspec = model.init_cache(B, cap, abstract=True,
+                                           enc_cap=enc_cap)
+            cache_sh = shardings_for(cache_pspec, mesh, rules)
+            cache_sds = _values(cache_pspec)
+            rec["memory_model"] = {
+                "params_bytes": tree_device_bytes(params_pspec, mesh, rules),
+                "cache_bytes": tree_device_bytes(cache_pspec, mesh, rules),
+            }
+            if shape.kind == "prefill":
+                def prefill(params, cache, batch):
+                    return model.prefill(params, cache, batch)
+                jitted = jax.jit(prefill,
+                                 in_shardings=(params_sh, cache_sh, b_sh),
+                                 out_shardings=(None, cache_sh),
+                                 donate_argnums=(1,))
+                lowered = jitted.lower(params_sds, cache_sds, b_specs)
+            else:
+                step = make_decode_step(model)
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                jitted = jax.jit(step,
+                                 in_shardings=(params_sh, cache_sh,
+                                               b_sh["tokens"],
+                                               NamedSharding(mesh, P())),
+                                 out_shardings=(None, cache_sh),
+                                 donate_argnums=(1,))
+                lowered = jitted.lower(params_sds, cache_sds,
+                                       b_specs["tokens"], b_specs["pos"])
+        rec["lower_s"] = time.time() - t0
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.time() - t1
+
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["cost_analysis_raw"] = {
+            "flops": ca.get("flops"), "bytes": ca.get("bytes accessed")}
+
+        t2 = time.time()
+        text = compiled.as_text()
+        ana = hlo_analysis.analyze(text)
+        rec["analyze_s"] = time.time() - t2
+        rec["hlo"] = {k: ana[k] for k in
+                      ("flops", "hbm_bytes", "collective_bytes")}
+        rec["per_collective"] = ana["per_collective"]
+        rec["roofline"] = hlo_analysis.roofline(ana)
+        rec["n_chips"] = n_chips
+        rec["model_flops_per_chip"] = rec["model_flops_global"] / n_chips
+        if ana["flops"]:
+            rec["useful_flop_ratio"] = \
+                rec["model_flops_per_chip"] / ana["flops"]
+        if save_hlo:
+            hlo_path = OUT_DIR / f"{arch}__{shape_name}__{mesh_name}.hlo"
+            hlo_path.write_text(text)
+        rec["status"] = "ok"
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all-meshes", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.all_meshes else [args.multi_pod]
+
+    if args.list:
+        for a in archs:
+            for s in shapes:
+                print(a, s, applies(get_config(a), SHAPES[s]) or "runs")
+        return
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                out = OUT_DIR / f"{arch}__{shape}__{mesh_name}.json"
+                try:
+                    rec = run_cell(arch, shape, mp, save_hlo=args.save_hlo)
+                except Exception as e:  # a failure here is a bug — record it
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()}
+                out.write_text(json.dumps(rec, indent=2, default=float))
+                status = rec.get("status")
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f"compile={rec['compile_s']:.1f}s "
+                             f"dom={r['dominant']} "
+                             f"tc={r['t_compute']:.4f} tm={r['t_memory']:.4f} "
+                             f"tcoll={r['t_collective']:.4f}")
+                elif status == "error":
+                    extra = rec["error"][:160]
+                print(f"[dryrun] {arch} {shape} {mesh_name}: {status} {extra}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

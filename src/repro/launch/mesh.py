@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A function, not a module-level constant, so importing this module never
+touches jax device state.  Single pod: 16x16 = 256 chips (v5e pod),
+axes (data, model).  Multi-pod: 2x16x16 = 512 chips, axes (pod, data,
+model) — the "pod" axis is the slow DCN/ICI-superlink dimension and only
+ever carries data parallelism in our configs.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2, *,
+                    multi_pod: bool = False):
+    """Small mesh for CI-sized sharding tests (requires
+    xla_force_host_platform_device_count set by the test harness)."""
+    if multi_pod:
+        return jax.make_mesh((2, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

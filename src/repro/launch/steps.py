@@ -1,0 +1,90 @@
+"""Step functions shared by the trainer, the serving runtime and dryrun."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+from ..optim.adamw import AdamWConfig, adamw_update
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    microbatches: int = 1, grad_shardings=None):
+    """state = {"params": bf16 tree, "opt": {master,m,v,step}}.
+
+    ``microbatches`` > 1 enables gradient accumulation: the global batch is
+    scanned in K sequential microbatches, shrinking the remat-residual
+    footprint K-fold (L x B_local/K x S x D x 2B) at the cost of K smaller
+    matmuls — the standard memory/efficiency knob at 4k-sequence training.
+
+    ``grad_shardings`` (params-shaped NamedSharding tree): pins the f32
+    accumulator to the params' ZeRO sharding.  Without it XLA reduces the
+    FULL gradient to replicated form on every microbatch — measured
+    1.3 TB/device/step of all-reduce on phi3.5 train_4k vs ~84 GB of
+    reduce-scatter when the accumulator stays sharded.
+    """
+
+    def _pin(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            grad_shardings)
+
+    def grad_fn(params, batch):
+        # pinning params is a no-op forward, but its TRANSPOSE pins the
+        # cotangent: gradients are born ZeRO-sharded and XLA emits
+        # reduce-scatters instead of psum-to-replicated + slice
+        def pinned_loss(p, b):
+            return model.loss(_pin(p), b)
+        return jax.value_and_grad(pinned_loss, has_aux=True)(params, batch)
+
+    def train_step(state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(state["params"], batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches,
+                                 *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, mbatch):
+                gacc, lacc = carry
+                (l, m), g = grad_fn(state["params"], mbatch)
+                gacc = _pin(jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, g))
+                return (gacc, lacc + l), m
+
+            g0 = _pin(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32),
+                state["params"]))
+            (gsum, lsum), ms = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = jax.tree.map(
+                lambda x: x[-1] if x.ndim >= 1 else x, ms)
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, grads, state["opt"])
+        out_metrics = {"loss": loss, **opt_metrics}
+        for k in ("aux_loss", "dropped", "expert_counts"):
+            if k in metrics:
+                out_metrics[k] = metrics[k]
+        return {"params": new_params, "opt": new_opt}, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill(params, cache, batch):
+        return model.prefill(params, cache, batch)
+    return prefill
+
+
+def make_decode_step(model: Model):
+    def decode(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+    return decode

@@ -1,0 +1,165 @@
+"""Training driver.
+
+CPU-runnable end-to-end: reduced configs of any assigned architecture, the
+real AdamW/train_step path, atomic+async checkpointing, failure injection
+with resume, and straggler monitoring.  On hardware the same driver runs
+the full configs under the production mesh (launch/mesh.py +
+distributed/sharding.py) — the dry-run proves those lower/compile.
+
+Examples:
+    python -m repro.launch.train --arch llama3-8b --smoke --steps 50
+    python -m repro.launch.train --arch phi3.5-moe-42b-a6.6b --smoke \
+        --steps 40 --fail-at-step 25 --resume   # crash + recover
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import latest_step, restore, save, save_async
+from ..configs import get_config
+from ..data import DataConfig, TokenPipeline
+from ..distributed.fault import FailureInjector, SimulatedFailure, \
+    StragglerMonitor
+from ..models import Model, unzip
+from ..models.params import zip_axes
+from ..optim import AdamWConfig, init_opt_state
+from .steps import make_train_step
+
+
+def build_state(model: Model, key, abstract=False):
+    params_pspec = model.init(key, abstract=abstract)
+    opt_pspec = init_opt_state(params_pspec, abstract=abstract)
+    params, params_axes = unzip(params_pspec)
+    opt, opt_axes = unzip(opt_pspec)
+    return ({"params": params, "opt": opt},
+            {"params": params_axes, "opt": opt_axes})
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--ckpt-async", action="store_true")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--fail-at-step", type=int, default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--respecialize-every", type=int, default=0,
+                    help="Morpheus on the training backend: every N steps "
+                    "re-plan hot experts from router statistics and swap "
+                    "in the branch-injected train step (0 = off)")
+    ap.add_argument("--hot-coverage", type=float, default=0.95)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    model = Model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+
+    state, _ = build_state(model, key)
+    n_params = sum(int(np.prod(x.shape)) for x in
+                   jax.tree.leaves(state["params"]))
+    print(f"[train] {cfg.name}: {n_params/1e6:.1f}M params", flush=True)
+
+    dcfg = DataConfig(vocab=cfg.vocab, seq=args.seq,
+                      global_batch=args.batch, seed=args.seed,
+                      media_tokens=cfg.num_media_tokens,
+                      d_model=cfg.d_model,
+                      enc_seq=(args.seq // cfg.enc_seq_divisor
+                               if cfg.encdec else 0))
+    pipe = TokenPipeline(dcfg)
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                          total_steps=args.steps)
+    train_step = jax.jit(make_train_step(model, opt_cfg,
+                                         microbatches=args.microbatches),
+                         donate_argnums=(0,))
+
+    start_step = 0
+    ckpt_dir = args.ckpt_dir or f"/tmp/repro_ckpt_{cfg.name}"
+    if args.resume and latest_step(ckpt_dir) is not None:
+        state, meta = restore(ckpt_dir, None, state)
+        pipe.load_state_dict(meta["data"])
+        start_step = meta["step"]
+        print(f"[train] resumed from step {start_step}", flush=True)
+
+    injector = FailureInjector(fail_at_step=args.fail_at_step,
+                               seed=args.seed)
+    straggler = StragglerMonitor(
+        on_straggler=lambda s, t: print(
+            f"[train] straggler mitigation fired at step {s} "
+            f"({t*1e3:.0f} ms)", flush=True))
+
+    pending = None
+    counts_acc = None
+    for step in range(start_step, args.steps):
+        injector.check(step)
+        t0 = time.time()
+        batch = pipe.next_batch()
+        state, metrics = train_step(state, batch)
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        straggler.observe(step, dt)
+
+        # Morpheus on the training backend: accumulate router statistics
+        # and swap in the hot-expert specialized step when a small set
+        # covers the traffic (exact semantics — lax.cond fallback on miss)
+        if args.respecialize_every and "expert_counts" in metrics:
+            c = np.asarray(metrics["expert_counts"]).reshape(
+                -1, cfg.moe.num_experts).sum(0)
+            counts_acc = c if counts_acc is None else counts_acc + c
+            if (step + 1) % args.respecialize_every == 0:
+                from ..distributed.meshctx import get_moe_hot, set_moe_hot
+                order = np.argsort(-counts_acc)
+                cum = np.cumsum(counts_acc[order]) / max(counts_acc.sum(),
+                                                         1)
+                n_hot = int(np.searchsorted(cum, args.hot_coverage) + 1)
+                hot = (tuple(int(e) for e in order[:n_hot])
+                       if n_hot < cfg.moe.num_experts else None)
+                if hot != get_moe_hot():
+                    set_moe_hot(hot)
+                    train_step = jax.jit(
+                        make_train_step(model, opt_cfg,
+                                        microbatches=args.microbatches),
+                        donate_argnums=(0,))
+                    print(f"[train] morpheus: swapped in hot-expert step "
+                          f"hot={hot}", flush=True)
+                counts_acc = None
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"[train] step={step} loss={loss:.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"lr={float(metrics['lr']):.2e} {dt*1e3:.0f}ms",
+                  flush=True)
+        if not np.isfinite(loss):
+            print("[train] non-finite loss — aborting", flush=True)
+            return 2
+        if args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+            meta = {"data": pipe.state_dict(), "arch": cfg.name}
+            if args.ckpt_async:
+                pending = save_async(ckpt_dir, step + 1, state, meta)
+            else:
+                save(ckpt_dir, step + 1, state, meta)
+    if pending is not None:
+        pending.join()
+    print(f"[train] done at step {args.steps}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,3 @@
+from .config import LayerSpec, MLAConfig, MoEConfig, ModelConfig, SSMConfig
+from .model import Model, cross_entropy
+from .params import PSpec, unzip, zip_axes

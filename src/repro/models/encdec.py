@@ -1,0 +1,76 @@
+"""Encoder-decoder assembly (seamless-m4t backbone).
+
+The modality frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_enc, D).  Encoder = bidirectional
+attention + FFN stack (scanned); decoder = causal self-attention +
+cross-attention + FFN (built on transformer.py with
+``LayerSpec(cross_attn=True)``)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import LayerSpec, ModelConfig
+from .layers import init_rmsnorm, rmsnorm
+from .params import Initializer, stack_pspecs
+from .transformer import init_layer, init_lm, init_lm_cache, layer_forward, \
+    lm_forward
+
+
+ENC_SPEC = LayerSpec(kind="attn", ffn="dense")
+
+
+def init_encdec(key, cfg: ModelConfig, abstract: bool = False):
+    ini = Initializer(key, dtype=jnp.bfloat16, abstract=abstract)
+    enc_layers = [init_layer(ini, cfg, ENC_SPEC)
+                  for _ in range(cfg.n_enc_layers)]
+    params = {
+        "encoder": {
+            "blocks": stack_pspecs(enc_layers),
+            "final_norm": init_rmsnorm(ini, cfg.d_model),
+        },
+        "decoder": init_lm(ini.take() if not abstract else
+                           jax.random.PRNGKey(0), cfg, abstract=abstract),
+    }
+    return params
+
+
+def encoder_forward(params, cfg: ModelConfig, frames: jax.Array,
+                    remat: bool = False) -> jax.Array:
+    """frames: (B, S_enc, D) stub-frontend embeddings."""
+    B, S, _ = frames.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(x, layer_params):
+        x, _, _ = layer_forward(layer_params, cfg, ENC_SPEC, x, positions,
+                                causal=False)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, frames.astype(jnp.bfloat16),
+                        params["blocks"])
+    return rmsnorm(params["final_norm"], x, cfg.rms_eps)
+
+
+def encdec_forward(params, cfg: ModelConfig, frames: Optional[jax.Array],
+                   tokens: jax.Array, cache=None, positions=None,
+                   remat: bool = False
+                   ) -> Tuple[jax.Array, Optional[dict], dict]:
+    """Train / prefill: frames present, encoder runs, cross K/V cached.
+    Decode: frames None, decoder reads cached cross K/V."""
+    enc_out = None
+    if frames is not None:
+        enc_out = encoder_forward(params["encoder"], cfg, frames,
+                                  remat=remat)
+    return lm_forward(params["decoder"], cfg, tokens, cache=cache,
+                      positions=positions, enc_out=enc_out, remat=remat)
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, cap: int, enc_cap: int,
+                      abstract: bool = False, kv_seq_axes=("seq_kv",)):
+    return init_lm_cache(cfg, batch, cap, abstract=abstract,
+                         kv_seq_axes=kv_seq_axes, enc_cap=enc_cap)

@@ -1,0 +1,108 @@
+"""Common layers: RMSNorm, embeddings, RoPE, gated FFN, logit head."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import Initializer, PSpec
+
+
+def dot_f32(eq: str, *ops) -> jax.Array:
+    """einsum with fp32 accumulation.  On TPU this is the MXU-native
+    bf16-in/f32-accumulate contraction (preferred_element_type); the XLA CPU
+    thunk cannot execute mixed-precision dots, so on host backends the
+    operands are upcast instead (identical FLOP count, same semantics)."""
+    if jax.default_backend() == "tpu":
+        return jnp.einsum(eq, *ops, preferred_element_type=jnp.float32)
+    return jnp.einsum(eq, *(o.astype(jnp.float32) for o in ops))
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(ini: Initializer, d: int):
+    return {"scale": ini.ones((d,), ("embed",), dtype=jnp.float32)}
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(ini: Initializer, vocab: int, d: int):
+    return {"table": ini.normal((vocab, d), ("vocab", "embed"), fan_in=d)}
+
+
+def embed(params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def init_unembed(ini: Initializer, d: int, vocab: int):
+    return {"w": ini.normal((d, vocab), ("embed", "vocab"))}
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def unembed(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    logits = jnp.einsum("...d,dv->...v", x, params["w"])
+    return softcap(logits, cfg.final_logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    dim = x.shape[-1]
+    freqs = rope_freqs(dim, theta)                      # (dim/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated FFN (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def init_ffn(ini: Initializer, d: int, d_ff: int, gated: bool = True):
+    p = {
+        "w_up": ini.normal((d, d_ff), ("embed", "mlp")),
+        "w_down": ini.normal((d_ff, d), ("mlp", "embed"), fan_in=d_ff),
+    }
+    if gated:
+        p["w_gate"] = ini.normal((d, d_ff), ("embed", "mlp"))
+    return p
+
+
+def ffn(params, x: jax.Array, act: str = "silu") -> jax.Array:
+    actf = jax.nn.silu if act == "silu" else jax.nn.gelu
+    up = jnp.einsum("...d,df->...f", x, params["w_up"])
+    if "w_gate" in params:
+        gate = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        h = actf(gate) * up
+    else:
+        h = actf(up)
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])

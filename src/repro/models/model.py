@@ -1,0 +1,108 @@
+"""Unified model API used by the launcher, Morpheus runtime, tests and
+benchmarks.
+
+``Model(cfg)`` binds a ModelConfig and exposes pure functions:
+
+  init(key, abstract)                  -> PSpec param tree
+  init_cache(batch, cap, ...)          -> PSpec cache tree
+  forward(params, batch)               -> logits, metrics          (train fwd)
+  loss(params, batch)                  -> scalar loss, metrics
+  prefill(params, cache, batch)        -> logits, cache
+  decode_step(params, cache, tok, pos) -> logits, cache
+
+``batch`` is a dict: tokens (B,S_text), labels, optional media (B,S_m,D)
+for VLM stubs, optional frames (B,S_enc,D) for enc-dec stubs.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .encdec import encdec_forward, init_encdec, init_encdec_cache
+from .transformer import init_lm, init_lm_cache, lm_forward
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None,
+                  n_valid: Optional[int] = None) -> jax.Array:
+    """Stable softmax CE.  logits (B,S,V) any float dtype, labels (B,S).
+    ``n_valid``: number of real vocab entries — padded columns (vocab
+    rounded up for sharding/MXU tiling) are masked to -inf."""
+    logits = logits.astype(jnp.float32)
+    if n_valid is not None and n_valid < logits.shape[-1]:
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        logits = jnp.where(col < n_valid, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ---- init ------------------------------------------------------------
+    def init(self, key, abstract: bool = False):
+        if self.cfg.encdec:
+            return init_encdec(key, self.cfg, abstract=abstract)
+        return init_lm(key, self.cfg, abstract=abstract)
+
+    def init_cache(self, batch: int, cap: int, abstract: bool = False,
+                   kv_seq_axes=("seq_kv",), enc_cap: int = 0):
+        if self.cfg.encdec:
+            return init_encdec_cache(self.cfg, batch, cap, enc_cap,
+                                     abstract=abstract,
+                                     kv_seq_axes=kv_seq_axes)
+        return init_lm_cache(self.cfg, batch, cap, abstract=abstract,
+                             kv_seq_axes=kv_seq_axes)
+
+    # ---- forward paths -----------------------------------------------------
+    def forward(self, params, batch, cache=None, remat: bool = False):
+        cfg = self.cfg
+        if cfg.encdec:
+            logits, cache, metrics = encdec_forward(
+                params, cfg, batch.get("frames"), batch["tokens"],
+                cache=cache, remat=remat)
+        else:
+            logits, cache, metrics = lm_forward(
+                params, cfg, batch["tokens"], cache=cache,
+                media_embeds=batch.get("media"), remat=remat)
+        return logits, cache, metrics
+
+    def loss(self, params, batch, remat: bool = True
+             ) -> Tuple[jax.Array, dict]:
+        cfg = self.cfg
+        logits, _, metrics = self.forward(params, batch, remat=remat)
+        if cfg.num_media_tokens and "media" in batch:
+            logits = logits[:, batch["media"].shape[1]:, :]
+        loss = cross_entropy(logits, batch["labels"], n_valid=cfg.vocab)
+        if cfg.moe is not None:
+            loss = loss + cfg.moe.router_aux_weight * metrics["aux_loss"]
+        metrics = {**metrics, "ce_loss": loss}
+        return loss, metrics
+
+    def prefill(self, params, cache, batch):
+        logits, cache, _ = self.forward(params, batch, cache=cache)
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens: (B,1) int32; pos: scalar int32 (write index in cache)."""
+        cfg = self.cfg
+        pos = jnp.asarray(pos)
+        positions = pos[None].astype(jnp.int32) if pos.ndim == 0 else pos
+        if cfg.encdec:
+            logits, cache, _ = encdec_forward(params, cfg, None, tokens,
+                                              cache=cache,
+                                              positions=positions)
+        else:
+            logits, cache, _ = lm_forward(params, cfg, tokens,
+                                          positions=positions, cache=cache)
+        return logits, cache

@@ -1,0 +1,109 @@
+"""Parameter trees with logical sharding axes.
+
+Every ``init_*`` function builds a nested dict whose leaves are
+:class:`PSpec` — an array (or ShapeDtypeStruct under ``jax.eval_shape``)
+zipped with a tuple of *logical axis names*.  ``unzip`` splits the tree into
+(values, axes); ``repro.distributed.sharding`` maps logical axes onto mesh
+axes.  Keeping the axes next to the initializer keeps the two in lockstep —
+the same property MaxText gets from ``param_with_axes``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class PSpec:
+    value: Any                      # jax.Array | ShapeDtypeStruct
+    axes: Tuple[Optional[str], ...]
+
+    def __repr__(self):
+        return f"PSpec({getattr(self.value, 'shape', ())}, axes={self.axes})"
+
+
+def is_pspec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def unzip(tree):
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_pspec)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_pspec)
+    return values, axes
+
+
+def zip_axes(values, axes):
+    return jax.tree.map(lambda v, a: PSpec(v, a), values, axes,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+class Initializer:
+    """Splits a PRNG key on demand; ``abstract=True`` produces
+    ShapeDtypeStruct leaves (no allocation) — how the full-size configs are
+    instantiated for the dry-run."""
+
+    def __init__(self, key: Optional[jax.Array], dtype=jnp.bfloat16,
+                 abstract: bool = False):
+        self._key = key
+        self.dtype = dtype
+        self.abstract = abstract
+
+    def take(self) -> jax.Array:
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def normal(self, shape, axes, scale: float = 1.0, fan_in: int = 0,
+               dtype=None) -> PSpec:
+        dtype = dtype or self.dtype
+        if self.abstract:
+            return PSpec(jax.ShapeDtypeStruct(tuple(shape), dtype),
+                         tuple(axes))
+        fan = fan_in or (shape[-2] if len(shape) >= 2 else shape[-1])
+        std = scale / (fan ** 0.5)
+        v = jax.random.normal(self.take(), shape, dtype) * jnp.asarray(
+            std, dtype)
+        return PSpec(v, tuple(axes))
+
+    def zeros(self, shape, axes, dtype=None) -> PSpec:
+        dtype = dtype or self.dtype
+        if self.abstract:
+            return PSpec(jax.ShapeDtypeStruct(tuple(shape), dtype),
+                         tuple(axes))
+        return PSpec(jnp.zeros(shape, dtype), tuple(axes))
+
+    def ones(self, shape, axes, dtype=None) -> PSpec:
+        dtype = dtype or self.dtype
+        if self.abstract:
+            return PSpec(jax.ShapeDtypeStruct(tuple(shape), dtype),
+                         tuple(axes))
+        return PSpec(jnp.ones(shape, dtype), tuple(axes))
+
+    def constant(self, value, axes) -> PSpec:
+        if self.abstract:
+            return PSpec(jax.ShapeDtypeStruct(value.shape, value.dtype),
+                         tuple(axes))
+        return PSpec(value, tuple(axes))
+
+
+def stack_pspecs(trees):
+    """Stack a list of structurally-identical PSpec trees along a new
+    leading "layers" axis (works for concrete arrays and SDS leaves)."""
+    def stack(*ps: PSpec) -> PSpec:
+        axes = ("layers",) + ps[0].axes
+        v0 = ps[0].value
+        if isinstance(v0, jax.ShapeDtypeStruct):
+            return PSpec(jax.ShapeDtypeStruct((len(ps),) + tuple(v0.shape),
+                                              v0.dtype), axes)
+        return PSpec(jnp.stack([p.value for p in ps]), axes)
+
+    return jax.tree.map(stack, *trees, is_leaf=is_pspec)
+
+
+def param_count(params) -> int:
+    return sum(int(jnp.size(x)) if not hasattr(x, "shape") else
+               int(jnp.prod(jnp.array(x.shape)))
+               for x in jax.tree.leaves(params))

@@ -1,0 +1,154 @@
+"""Mamba2 (SSD — state-space duality) block.
+
+Layout follows the Mamba2 reference: a single input projection produces
+(z, xBC, dt); xBC passes through a short causal depthwise conv; the SSD
+chunked scan runs per head; the output is gated-RMSNormed and projected
+back.  Sequence compute dispatches to ``kernels.ops.ssd_scan`` (Pallas on
+TPU, oracle elsewhere); decode is an O(1)-state update.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+from .config import ModelConfig, SSMConfig
+from .layers import rmsnorm
+from .params import Initializer
+
+
+def _dims(cfg: ModelConfig):
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    return s, d_inner, H, conv_ch
+
+
+def init_mamba(ini: Initializer, cfg: ModelConfig):
+    s, d_inner, H, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    in_dim = 2 * d_inner + 2 * s.n_groups * s.d_state + H
+    return {
+        "in_proj": ini.normal((d, in_dim), ("embed", "ssm_in")),
+        "conv_w": ini.normal((s.conv_width, conv_ch), (None, "ssm_in"),
+                             fan_in=s.conv_width),
+        "conv_b": ini.zeros((conv_ch,), ("ssm_in",)),
+        "A_log": ini.constant(
+            jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+            ("ssm_heads",)),
+        "D": ini.ones((H,), ("ssm_heads",), dtype=jnp.float32),
+        "dt_bias": ini.zeros((H,), ("ssm_heads",), dtype=jnp.float32),
+        "norm_scale": ini.ones((d_inner,), ("ssm_in",), dtype=jnp.float32),
+        "out_proj": ini.normal((d_inner, d), ("ssm_in", "embed"),
+                               fan_in=d_inner),
+    }
+
+
+def _split(params, cfg: ModelConfig, x: jax.Array):
+    s, d_inner, H, conv_ch = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + conv_ch]
+    dt = zxbcdt[..., d_inner + conv_ch:]
+    return z, xBC, dt
+
+
+def _conv_full(params, xBC: jax.Array, width: int) -> jax.Array:
+    """Causal depthwise conv over (B,S,C)."""
+    pad = jnp.pad(xBC, ((0, 0), (width - 1, 0), (0, 0)))
+    S = xBC.shape[1]
+    out = params["conv_b"].astype(jnp.float32)
+    acc = jnp.zeros_like(xBC, dtype=jnp.float32) + out
+    for i in range(width):                       # static small width
+        acc = acc + (params["conv_w"][i].astype(jnp.float32) *
+                     pad[:, i:i + S].astype(jnp.float32))
+    return jax.nn.silu(acc).astype(xBC.dtype)
+
+
+def _conv_step(params, xBC_t: jax.Array, conv_state: jax.Array, width: int):
+    """xBC_t: (B,C) new input; conv_state: (B, width-1, C) past inputs."""
+    hist = jnp.concatenate([conv_state, xBC_t[:, None, :]], axis=1)
+    acc = params["conv_b"].astype(jnp.float32)
+    out = jnp.einsum("wc,bwc->bc", params["conv_w"].astype(jnp.float32),
+                     hist.astype(jnp.float32)) + acc
+    new_state = hist[:, 1:, :]
+    return jax.nn.silu(out).astype(xBC_t.dtype), new_state
+
+
+def _ssd_inputs(params, cfg: ModelConfig, xBC: jax.Array, dt: jax.Array):
+    s, d_inner, H, _ = _dims(cfg)
+    G, N, P = s.n_groups, s.d_state, s.head_dim
+    x_in = xBC[..., :d_inner]
+    Bm = xBC[..., d_inner:d_inner + G * N]
+    Cm = xBC[..., d_inner + G * N:]
+    lead = xBC.shape[:-1]
+    x_in = x_in.reshape(*lead, H, P)
+    Bm = Bm.reshape(*lead, G, N)
+    Cm = Cm.reshape(*lead, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    return x_in, Bm, Cm, dt, A
+
+
+def mamba_forward(params, cfg: ModelConfig, x: jax.Array, *,
+                  cache=None) -> Tuple[jax.Array, Optional[dict]]:
+    """Full-sequence forward.  cache (optional) receives the final
+    (conv, ssm) state for subsequent decode."""
+    s, d_inner, H, _ = _dims(cfg)
+    B, S, _ = x.shape
+    z, xBC, dt = _split(params, cfg, x)
+    xBC_conv = _conv_full(params, xBC, s.conv_width)
+    x_in, Bm, Cm, dt_sp, A = _ssd_inputs(params, cfg, xBC_conv, dt)
+    y, final_state = kops.ssd_scan(x_in, dt_sp, A, Bm, Cm, chunk=s.chunk)
+    y = y + (params["D"].astype(jnp.float32)[:, None] *
+             x_in.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm({"scale": params["norm_scale"]},
+                y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                cfg.rms_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+
+    new_cache = None
+    if cache is not None:
+        # last width-1 raw conv inputs
+        conv_state = xBC[:, S - (s.conv_width - 1):, :]
+        new_cache = {"conv": conv_state.astype(cache["conv"].dtype),
+                     "ssm": final_state.astype(cache["ssm"].dtype)}
+    return out, new_cache
+
+
+def mamba_decode(params, cfg: ModelConfig, x: jax.Array, cache: dict
+                 ) -> Tuple[jax.Array, dict]:
+    """x: (B,1,D); cache: {"conv": (B,w-1,C), "ssm": (B,H,P,N)}."""
+    s, d_inner, H, _ = _dims(cfg)
+    B = x.shape[0]
+    z, xBC, dt = _split(params, cfg, x)
+    xBC_t, new_conv = _conv_step(params, xBC[:, 0, :],
+                                 cache["conv"].astype(xBC.dtype),
+                                 s.conv_width)
+    x_in, Bm, Cm, dt_sp, A = _ssd_inputs(params, cfg, xBC_t[:, None, :],
+                                         dt)
+    y, new_ssm = kops.ssd_decode(x_in[:, 0], dt_sp[:, 0], A,
+                                 Bm[:, 0], Cm[:, 0],
+                                 cache["ssm"].astype(jnp.float32))
+    y = y + (params["D"].astype(jnp.float32)[:, None] *
+             x_in[:, 0].astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(B, 1, d_inner)
+    y = rmsnorm({"scale": params["norm_scale"]},
+                y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                cfg.rms_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, {"conv": new_conv.astype(cache["conv"].dtype),
+                 "ssm": new_ssm.astype(cache["ssm"].dtype)}
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s, d_inner, H, conv_ch = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+    }

@@ -1,0 +1,333 @@
+"""Decoder-only transformer assembly.
+
+Supports every assigned LM family through the block-pattern mechanism:
+homogeneous stacks scan over layers; heterogeneous stacks (jamba's 1:7
+attn:mamba interleave, gemma2's local/global alternation) scan over
+*periods* of the pattern with the period unrolled inside the scan body;
+``first_k_dense`` prefix layers (deepseek-v2) are unrolled outside the scan.
+
+All parameter/cache trees carry logical sharding axes (PSpec leaves).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.meshctx import constrain
+from .attention import gqa_forward, init_attention, init_mla_attention, \
+    mla_forward
+from .config import LayerSpec, ModelConfig
+from .layers import embed, ffn, init_embedding, init_ffn, init_rmsnorm, \
+    init_unembed, rmsnorm, unembed
+from .moe import init_moe, moe_ffn
+from .params import Initializer, PSpec, stack_pspecs, unzip
+from .ssd import init_mamba, init_mamba_cache, mamba_decode, mamba_forward
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+
+def init_layer(ini: Initializer, cfg: ModelConfig, spec: LayerSpec,
+               d_ff_override: int = 0):
+    p = {}
+    if spec.kind == "attn":
+        p["attn_norm"] = init_rmsnorm(ini, cfg.d_model)
+        p["attn"] = (init_mla_attention(ini, cfg) if cfg.mla
+                     else init_attention(ini, cfg))
+        if cfg.post_norm:
+            p["attn_post_norm"] = init_rmsnorm(ini, cfg.d_model)
+    else:
+        p["mamba_norm"] = init_rmsnorm(ini, cfg.d_model)
+        p["mamba"] = init_mamba(ini, cfg)
+    if spec.cross_attn:
+        p["cross_norm"] = init_rmsnorm(ini, cfg.d_model)
+        p["cross"] = init_attention(ini, cfg)
+    if spec.ffn != "none":
+        p["ffn_norm"] = init_rmsnorm(ini, cfg.d_model)
+        if spec.ffn == "moe":
+            p["ffn"] = init_moe(ini, cfg)
+        else:
+            p["ffn"] = init_ffn(ini, cfg.d_model,
+                                d_ff_override or cfg.d_ff,
+                                gated=cfg.ffn_gated)
+        if cfg.post_norm:
+            p["ffn_post_norm"] = init_rmsnorm(ini, cfg.d_model)
+    return p
+
+
+def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, cap: int,
+                     abstract: bool = False, kv_seq_axes=("seq_kv",),
+                     enc_cap: int = 0):
+    """Cache PSpec tree for one layer (decode state)."""
+    dt = jnp.bfloat16
+
+    def z(shape, dtype, axes, fill=None):
+        if abstract:
+            return PSpec(jax.ShapeDtypeStruct(shape, dtype), axes)
+        v = jnp.zeros(shape, dtype) if fill is None else \
+            jnp.full(shape, fill, dtype)
+        return PSpec(v, axes)
+
+    c = {}
+    if spec.kind == "attn":
+        if cfg.mla:
+            m = cfg.mla
+            c["kv"] = {
+                "ckv": z((batch, cap, m.kv_lora_rank), dt,
+                         ("batch",) + kv_seq_axes + ("kv_lora",)),
+                "k_rope": z((batch, cap, m.qk_rope_dim), dt,
+                            ("batch",) + kv_seq_axes + (None,)),
+                "pos": z((cap,), jnp.int32, kv_seq_axes, fill=-1),
+            }
+        else:
+            c["kv"] = {
+                "k": z((batch, cap, cfg.n_kv_heads, cfg.head_dim_), dt,
+                       ("batch",) + kv_seq_axes + ("kv_heads", "head_dim")),
+                "v": z((batch, cap, cfg.n_kv_heads, cfg.head_dim_), dt,
+                       ("batch",) + kv_seq_axes + ("kv_heads", "head_dim")),
+                "pos": z((cap,), jnp.int32, kv_seq_axes, fill=-1),
+            }
+    else:
+        s = cfg.ssm
+        d_inner = s.expand * cfg.d_model
+        H = d_inner // s.head_dim
+        conv_ch = d_inner + 2 * s.n_groups * s.d_state
+        c["mamba"] = {
+            "conv": z((batch, s.conv_width - 1, conv_ch), dt,
+                      ("batch", None, "ssm_in")),
+            "ssm": z((batch, H, s.head_dim, s.d_state), jnp.float32,
+                     ("batch", "ssm_heads", None, None)),
+        }
+    if spec.cross_attn:
+        c["xkv"] = {
+            "k": z((batch, enc_cap, cfg.n_kv_heads, cfg.head_dim_), dt,
+                   ("batch", "seq_enc", "kv_heads", "head_dim")),
+            "v": z((batch, enc_cap, cfg.n_kv_heads, cfg.head_dim_), dt,
+                   ("batch", "seq_enc", "kv_heads", "head_dim")),
+        }
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Per-layer forward
+# ---------------------------------------------------------------------------
+
+def _zero_metrics(cfg: ModelConfig):
+    m = {"aux_loss": jnp.zeros((), jnp.float32),
+         "dropped": jnp.zeros((), jnp.float32)}
+    if cfg.moe is not None:
+        m["expert_counts"] = jnp.zeros((cfg.moe.num_experts,), jnp.int32)
+    return m
+
+
+def layer_forward(p, cfg: ModelConfig, spec: LayerSpec, x: jax.Array,
+                  positions: jax.Array, cache=None, enc_out=None,
+                  causal: bool = True):
+    """Returns (x, new_cache, metrics).
+
+    ``enc_out``: encoder output (B, S_enc, D) for cross-attention layers —
+    required at prefill/train; at decode the per-layer cross K/V come from
+    the cache (projected once at prefill)."""
+    new_cache = {} if cache is not None else None
+    metrics = _zero_metrics(cfg)
+    B, S, _ = x.shape
+
+    if spec.kind == "attn":
+        h = rmsnorm(p["attn_norm"], x, cfg.rms_eps)
+        kv_cache = cache["kv"] if cache is not None else None
+        if cfg.mla:
+            a, kvc = mla_forward(p["attn"], cfg, h, positions,
+                                 cache=kv_cache)
+        else:
+            a, kvc = gqa_forward(p["attn"], cfg, h, positions,
+                                 window=spec.window, cache=kv_cache,
+                                 causal=causal)
+        if cfg.post_norm:
+            a = rmsnorm(p["attn_post_norm"], a, cfg.rms_eps)
+        x = x + a
+        if new_cache is not None:
+            new_cache["kv"] = kvc
+    else:
+        h = rmsnorm(p["mamba_norm"], x, cfg.rms_eps)
+        mc = cache["mamba"] if cache is not None else None
+        if mc is not None and S == 1:
+            a, mcn = mamba_decode(p["mamba"], cfg, h, mc)
+        else:
+            a, mcn = mamba_forward(p["mamba"], cfg, h, cache=mc)
+        x = x + a
+        if new_cache is not None:
+            new_cache["mamba"] = mcn
+
+    if spec.cross_attn:
+        from .attention import project_kv
+        h = rmsnorm(p["cross_norm"], x, cfg.rms_eps)
+        if enc_out is not None:
+            xk, xv = project_kv(p["cross"], enc_out)
+            if new_cache is not None:
+                new_cache["xkv"] = {
+                    "k": xk.astype(cache["xkv"]["k"].dtype),
+                    "v": xv.astype(cache["xkv"]["v"].dtype)}
+        else:
+            xk, xv = cache["xkv"]["k"], cache["xkv"]["v"]
+            if new_cache is not None:
+                new_cache["xkv"] = cache["xkv"]
+        kv_pos = jnp.arange(xk.shape[1], dtype=jnp.int32)
+        a, _ = gqa_forward(p["cross"], cfg, h, positions,
+                           kv_const=(xk, xv, kv_pos))
+        x = x + a
+
+    if spec.ffn != "none":
+        h = rmsnorm(p["ffn_norm"], x, cfg.rms_eps)
+        if spec.ffn == "moe":
+            f, mmetrics = moe_ffn(p["ffn"], h, cfg)
+            metrics = {**metrics, **{k: v for k, v in mmetrics.items()
+                                     if k in metrics}}
+            if "expert_counts" in metrics:
+                metrics["expert_counts"] = mmetrics["expert_counts"]
+        else:
+            f = ffn(p["ffn"], h, cfg.ffn_act)
+        if cfg.post_norm:
+            f = rmsnorm(p["ffn_post_norm"], f, cfg.rms_eps)
+        x = x + f
+    return x, new_cache, metrics
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg: ModelConfig, abstract: bool = False):
+    """Returns a PSpec tree: embeddings + unrolled prefix + per-pattern-
+    position stacks of shape (n_periods, ...)."""
+    ini = Initializer(key, dtype=jnp.bfloat16, abstract=abstract)
+    params = {
+        "embed": init_embedding(ini, cfg.padded_vocab, cfg.d_model),
+        "final_norm": init_rmsnorm(ini, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = init_unembed(ini, cfg.d_model, cfg.padded_vocab)
+    dense_spec = LayerSpec(kind="attn", ffn="dense")
+    for i in range(cfg.first_k_dense):
+        params[f"prefix{i}"] = init_layer(
+            ini, cfg, dense_spec, d_ff_override=cfg.first_dense_d_ff)
+    pattern = cfg.pattern
+    blocks = {}
+    for pos, spec in enumerate(pattern):
+        period_trees = [init_layer(ini, cfg, spec)
+                        for _ in range(cfg.n_periods)]
+        blocks[f"pos{pos}"] = stack_pspecs(period_trees)
+    params["blocks"] = blocks
+    return params
+
+
+def init_lm_cache(cfg: ModelConfig, batch: int, cap: int,
+                  abstract: bool = False, kv_seq_axes=("seq_kv",),
+                  enc_cap: int = 0):
+    cache = {}
+    dense_spec = LayerSpec(kind="attn", ffn="dense")
+    for i in range(cfg.first_k_dense):
+        cache[f"prefix{i}"] = init_layer_cache(
+            cfg, dense_spec, batch, cap, abstract, kv_seq_axes, enc_cap)
+    blocks = {}
+    for pos, spec in enumerate(cfg.pattern):
+        period_trees = [init_layer_cache(cfg, spec, batch, cap, abstract,
+                                         kv_seq_axes, enc_cap)
+                        for _ in range(cfg.n_periods)]
+        blocks[f"pos{pos}"] = stack_pspecs(period_trees)
+    cache["blocks"] = blocks
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Whole-model forward (params/caches are *value* trees, axes stripped)
+# ---------------------------------------------------------------------------
+
+def lm_forward(params, cfg: ModelConfig, tokens: jax.Array,
+               positions: Optional[jax.Array] = None, cache=None,
+               media_embeds: Optional[jax.Array] = None,
+               enc_out=None, remat: bool = False
+               ) -> Tuple[jax.Array, Optional[dict], dict]:
+    """tokens: (B, S_text).  media_embeds: (B, S_media, D) stub-frontend
+    embeddings prepended to the text sequence (vlm/audio).
+    enc_out: (B, S_enc, D) encoder output for enc-dec decoders (None at
+    decode — cross K/V then come from the cache).
+
+    Returns (logits, new_cache, metrics)."""
+    x = embed(params["embed"], tokens)
+    if media_embeds is not None:
+        x = jnp.concatenate([media_embeds.astype(x.dtype), x], axis=1)
+    x = constrain(x, ("batch", None, None))
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+
+    total_metrics = _zero_metrics(cfg)
+
+    new_cache = {} if cache is not None else None
+    for i in range(cfg.first_k_dense):
+        spec = LayerSpec(kind="attn", ffn="dense")
+        c = cache[f"prefix{i}"] if cache is not None else None
+        x, nc, m = layer_forward(params[f"prefix{i}"], cfg, spec, x,
+                                 positions, c, enc_out)
+        total_metrics["aux_loss"] += m["aux_loss"]
+        if new_cache is not None:
+            new_cache[f"prefix{i}"] = nc
+
+    pattern = cfg.pattern
+
+    def body(carry, xs):
+        x = constrain(carry, ("batch", None, None))
+        period_params, period_cache = xs
+        aux = jnp.zeros((), jnp.float32)
+        dropped = jnp.zeros((), jnp.float32)
+        counts = (jnp.zeros((cfg.moe.num_experts,), jnp.int32)
+                  if cfg.moe is not None else jnp.zeros((1,), jnp.int32))
+        ncache = {}
+        for pos, spec in enumerate(pattern):
+            c = period_cache[f"pos{pos}"] if period_cache is not None else None
+            x, nc, m = layer_forward(period_params[f"pos{pos}"], cfg, spec,
+                                     x, positions, c, enc_out)
+            aux += m["aux_loss"]
+            dropped += m["dropped"]
+            if cfg.moe is not None and "expert_counts" in m:
+                counts = counts + m["expert_counts"]
+            if nc is not None:
+                ncache[f"pos{pos}"] = nc
+        ys = (ncache if period_cache is not None else 0,
+              aux, dropped, counts)
+        return x, ys
+
+    if cache is None:
+        xs = (params["blocks"], jnp.zeros((cfg.n_periods,), jnp.int8))
+
+        def body_nc(x, xs):
+            period_params, _ = xs
+            return body(x, (period_params, None))
+        if remat:
+            # full activation checkpointing: only layer boundaries are saved
+            body_nc = jax.checkpoint(
+                body_nc, policy=jax.checkpoint_policies.nothing_saveable)
+        x, (_, auxs, drops, counts) = jax.lax.scan(body_nc, x, xs)
+    else:
+        xs = (params["blocks"], cache["blocks"])
+        x, (ncache_blocks, auxs, drops, counts) = jax.lax.scan(body, x, xs)
+        new_cache["blocks"] = ncache_blocks
+
+    total_metrics["aux_loss"] += auxs.sum()
+    total_metrics["dropped"] += drops.sum()
+    if cfg.moe is not None:
+        total_metrics["expert_counts"] = counts  # (n_periods, E)
+
+    x = constrain(rmsnorm(params["final_norm"], x, cfg.rms_eps),
+                  ("batch", None, None))
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["table"])
+        from .layers import softcap as _sc
+        logits = _sc(logits, cfg.final_logit_softcap)
+    else:
+        logits = unembed(params["unembed"], x, cfg)
+    logits = constrain(logits, ("batch", None, "vocab"))
+    return logits, new_cache, total_metrics

@@ -1,0 +1,118 @@
+"""AdamW in pure JAX with fp32 master weights and sharded moments.
+
+State layout (all trees mirror the param tree):
+  master: fp32 copy of the params (source of truth)
+  m, v:   fp32 first/second moments
+  step:   scalar int32
+
+The optimizer state inherits the params' logical sharding axes, so under
+FSDP rules the master/moments are ZeRO-sharded for free.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.params import PSpec, is_pspec
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params_pspec, abstract: bool = False):
+    """params_pspec: PSpec tree of the (bf16) params.  Returns PSpec trees
+    for master/m/v (fp32, same logical axes) + step."""
+    def f32_like(p: PSpec) -> PSpec:
+        v = p.value
+        if abstract or isinstance(v, jax.ShapeDtypeStruct):
+            return PSpec(jax.ShapeDtypeStruct(tuple(v.shape), jnp.float32),
+                         p.axes)
+        # copy=True: astype on an f32 leaf would alias the param buffer
+        # and break donation (`f(donate(a), a)`)
+        return PSpec(jnp.array(v, dtype=jnp.float32, copy=True), p.axes)
+
+    def zeros_like(p: PSpec) -> PSpec:
+        v = p.value
+        if abstract or isinstance(v, jax.ShapeDtypeStruct):
+            return PSpec(jax.ShapeDtypeStruct(tuple(v.shape), jnp.float32),
+                         p.axes)
+        return PSpec(jnp.zeros(v.shape, jnp.float32), p.axes)
+
+    step = PSpec(jax.ShapeDtypeStruct((), jnp.int32) if abstract
+                 else jnp.zeros((), jnp.int32), ())
+    return {
+        "master": jax.tree.map(f32_like, params_pspec, is_leaf=is_pspec),
+        "m": jax.tree.map(zeros_like, params_pspec, is_leaf=is_pspec),
+        "v": jax.tree.map(zeros_like, params_pspec, is_leaf=is_pspec),
+        "step": step,
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt_state):
+    """Returns (new_params, new_opt_state, metrics).  Each new param is
+    cast back to its ORIGINAL dtype (taken from the grad leaf — bf16
+    weights stay bf16, f32 norm scales stay f32)."""
+    step = opt_state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, master, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        new_master = master - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                                    + cfg.weight_decay * master)
+        return new_master, m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_ma = jax.tree.leaves(opt_state["master"])
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    out = [upd(g, ma, m, v) for g, ma, m, v
+           in zip(flat_g, flat_ma, flat_m, flat_v)]
+    new_master = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    new_params = jax.tree.map(
+        lambda m, g: jnp.array(m, dtype=g.dtype,
+                               copy=(g.dtype == jnp.float32)),
+        new_master, grads)
+    new_opt = {"master": new_master, "m": new_m, "v": new_v, "step": step}
+    return new_params, new_opt, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,201 @@
+"""Morpheus core: analysis, instrumentation, passes, guards, runtime."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, MorpheusRuntime, SketchConfig, Table, \
+    TableSet
+from repro.core import instrument
+from repro.core.passes.const_prop import constant_fields, propose_const_row
+from repro.core.passes.dstruct import lookup_cost, propose_dstruct
+from repro.core.passes.table_jit import propose_eliminate, propose_inline
+from repro.serving import ServeConfig, build_params, build_tables, \
+    make_request_batch, make_serve_step
+
+KEY = jax.random.PRNGKey(0)
+SK = SketchConfig(sample_every=2, max_hot=4, hot_coverage=0.5)
+
+
+# ---------------------------------------------------------------------------
+# instrumentation
+# ---------------------------------------------------------------------------
+
+def test_sketch_heavy_hitters():
+    state = instrument.init_site_state(SK)
+    rng = np.random.default_rng(0)
+    # 90% of lookups hit keys {3, 7}; the rest are uniform over 1000
+    for _ in range(20):
+        hot = rng.choice([3, 7], size=180)
+        cold = rng.integers(0, 1000, size=20)
+        keys = jnp.asarray(np.concatenate([hot, cold]), jnp.int32)
+        state = instrument.record(state, keys, SK)
+    hot, cov, total = instrument.hot_keys(state, SK)
+    assert total == 4000
+    assert set(hot[:2].tolist()) == {3, 7}
+    assert cov > 0.8
+
+
+def test_sketch_estimate_overcounts_only():
+    state = instrument.init_site_state(SK)
+    keys = jnp.asarray(np.repeat(np.arange(50), 10), jnp.int32)
+    state = instrument.record(state, keys, SK)
+    est = np.asarray(instrument.estimate(state, jnp.arange(50)))
+    assert (est >= 10).all()          # count-min never undercounts
+
+
+def test_sketch_merge():
+    a = instrument.init_site_state(SK)
+    b = instrument.init_site_state(SK)
+    a = instrument.record(a, jnp.full((64,), 5, jnp.int32), SK)
+    b = instrument.record(b, jnp.full((64,), 5, jnp.int32), SK)
+    m = instrument.merge([a, b])
+    assert int(instrument.estimate(m, jnp.asarray([5]))[0]) >= 128
+
+
+def test_adaptive_controller_backs_off():
+    ctl = instrument.AdaptiveController(SK)
+    e0 = ctl.sample_every
+    for _ in range(4):
+        ctl.observe("s", np.array([1, 2, 3]))
+    assert ctl.sample_every > e0          # stable hot set -> sample less
+    stable = ctl.sample_every
+    ctl.observe("s", np.array([9, 9, 9]))
+    assert ctl.sample_every < stable        # churn -> sample more
+
+
+# ---------------------------------------------------------------------------
+# passes (unit)
+# ---------------------------------------------------------------------------
+
+def _table(n_valid, cap=32, const=False):
+    rng = np.random.default_rng(1)
+    vals = (np.ones((cap, 8), np.float32) if const
+            else rng.standard_normal((cap, 8)).astype(np.float32))
+    return Table("t", {"v": vals, "f": np.zeros(cap, np.int32)},
+                 n_valid=n_valid, default={"v": 0.0})
+
+
+def test_pass_eliminate_empty():
+    assert propose_eliminate(_table(0)).impl == "eliminated"
+    assert propose_eliminate(_table(3)) is None
+
+
+def test_pass_inline_small_ro():
+    t = _table(4)
+    spec = propose_inline(t, "ro")
+    assert spec.impl == "inline_const"
+    assert propose_inline(t, "rw") is None
+    assert propose_inline(_table(30), "ro") is None   # too big
+
+
+def test_pass_const_prop():
+    t = _table(8, const=True)
+    assert set(constant_fields(t)) == {"v", "f"}
+    assert propose_const_row(t, "ro").impl == "const_row"
+    assert propose_const_row(_table(8), "ro") is None
+
+
+def test_dstruct_cost_model_prefers_onehot_small():
+    small, big = _table(8), _table(32, cap=4096)
+    big.fields["v"] = np.zeros((4096, 8), np.float32)
+    big.n_valid = 4096
+    assert lookup_cost(small, "onehot", 1024) < lookup_cost(
+        small, "gather", 1024)
+    spec = propose_dstruct(big, "ro")
+    # large tables may keep the gather
+    assert spec is None or spec.impl == "onehot"
+
+
+# ---------------------------------------------------------------------------
+# end-to-end runtime
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def runtime():
+    cfg = ServeConfig()
+    params = build_params(cfg, KEY)
+    tables = build_tables(cfg, KEY)
+    step = make_serve_step(cfg)
+    ecfg = EngineConfig(sketch=SK,
+                        features={"vision_enabled": False,
+                                  "track_sessions": True},
+                        moe_router_table="router")
+    rt = MorpheusRuntime(step, tables, params,
+                         make_request_batch(cfg, KEY), cfg=ecfg)
+    rt._serve_cfg = cfg
+    return rt
+
+
+def test_analysis_classifies_tables(runtime):
+    assert runtime.analysis["mutability"]["sessions"] == "rw"
+    assert runtime.analysis["mutability"]["req_class"] == "ro"
+    assert runtime.analysis["n_sites"] >= 5
+
+
+def test_specialization_preserves_semantics(runtime):
+    cfg = runtime._serve_cfg
+    for i in range(6):
+        runtime.step(make_request_batch(cfg, jax.random.PRNGKey(i)))
+    runtime.recompile(block=True)
+    assert runtime.plan.label.startswith("specialized")
+    batch = make_request_batch(cfg, jax.random.PRNGKey(77))
+    out_s = runtime.step(batch)
+    out_g, *_ = runtime.generic_exec(runtime.params, runtime.table_state,
+                                     runtime.instr_state, runtime.guards,
+                                     batch)
+    np.testing.assert_allclose(np.asarray(out_s), np.asarray(out_g),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_empty_adapter_table_eliminated(runtime):
+    impls = dict((sid.split("#")[0], s.impl) for sid, s in
+                 runtime.plan.sites)
+    assert impls.get("adapters") == "eliminated"
+
+
+def test_guard_elision_ro_sites(runtime):
+    for sid, s in runtime.plan.sites:
+        if not sid.startswith("sessions"):
+            assert not s.guarded, f"RO site {sid} should elide its guard"
+
+
+def test_program_guard_deopt_and_recovery(runtime):
+    cfg = runtime._serve_cfg
+    batch = make_request_batch(cfg, jax.random.PRNGKey(5))
+    runtime.recompile(block=True)
+    d0 = runtime.stats.deopt_steps
+    runtime.control_update(
+        "req_class",
+        {"temperature": np.full(cfg.n_classes, 2.0, np.float32)})
+    out = runtime.step(batch)          # program guard must route generic
+    assert runtime.stats.deopt_steps == d0 + 1
+    # new temperature must be live immediately (generic path reads tables)
+    runtime.recompile(block=True)
+    out2 = runtime.step(batch)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_dead_code_flag_shrinks_program(runtime):
+    cfg = runtime._serve_cfg
+    eng = runtime.engine
+    plan_off, _, _ = eng.build_plan({})
+    import dataclasses
+    plan_on = dataclasses.replace(
+        plan_off, flags={**plan_off.flags, "vision_enabled": True})
+    batch = make_request_batch(cfg, KEY)
+    args = (runtime.params, runtime.table_state, runtime.instr_state,
+            runtime.guards, batch)
+    jx_off = jax.make_jaxpr(eng.make_step_fn(plan_off))(*args)
+    jx_on = jax.make_jaxpr(eng.make_step_fn(plan_on))(*args)
+    assert len(jx_off.jaxpr.eqns) < len(jx_on.jaxpr.eqns)
+
+
+def test_rw_update_invalidates_site_guard(runtime):
+    cfg = runtime._serve_cfg
+    batch = make_request_batch(cfg, KEY)
+    runtime.guards = runtime.engine.init_guards()
+    assert int(runtime.guards["sessions"][0]) == 0
+    runtime.step(batch)                # step writes sessions
+    assert int(runtime.guards["sessions"][0]) == 1

@@ -1,0 +1,93 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SketchConfig, instrument
+from repro.kernels import ref as R
+from repro.launch import hlo_analysis as H
+from repro.models.model import cross_entropy
+
+SK = SketchConfig(width=256, candidates=64)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=200))
+def test_count_min_never_undercounts(keys):
+    """CMS point estimates are always >= true counts."""
+    state = instrument.init_site_state(SK)
+    state = instrument.record(state, jnp.asarray(keys, jnp.int32), SK)
+    uniq, counts = np.unique(keys, return_counts=True)
+    est = np.asarray(instrument.estimate(state, jnp.asarray(uniq)))
+    assert (est >= counts).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 64), st.integers(1, 8))
+def test_sketch_total_tracks_records(n_keys, n_rounds):
+    state = instrument.init_site_state(SK)
+    for _ in range(n_rounds):
+        state = instrument.record(
+            state, jnp.arange(n_keys, dtype=jnp.int32), SK)
+    assert int(state["total"]) == n_keys * n_rounds
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 4), st.integers(8, 64), st.integers(1, 4))
+def test_attention_rows_sum_to_one(b, s, h):
+    """Softmax invariance: output is a convex combination of V rows, so
+    attention of constant-v inputs returns that constant."""
+    key = jax.random.PRNGKey(b * 1000 + s)
+    q = jax.random.normal(key, (b, s, h, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, 16))
+    v = jnp.ones((b, s, h, 16))
+    out = R.flash_attention_ref(q, k, v, causal=True, block=16)
+    np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.integers(4, 32))
+def test_ssd_zero_input_zero_output(b, s):
+    """SSD is linear in x: zero input => zero output and zero state."""
+    key = jax.random.PRNGKey(s)
+    H_, P, N = 2, 4, 8
+    x = jnp.zeros((b, s, H_, P))
+    dt = jax.nn.softplus(jax.random.normal(key, (b, s, H_)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 1), (H_,)))
+    Bm = jax.random.normal(jax.random.fold_in(key, 2), (b, s, 1, N))
+    Cm = jax.random.normal(jax.random.fold_in(key, 3), (b, s, 1, N))
+    y, fin = R.ssd_scan_ref(x, dt, A, Bm, Cm, 8)
+    assert float(jnp.abs(y).max()) == 0.0
+    assert float(jnp.abs(fin).max()) == 0.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 50), st.integers(51, 80))
+def test_vocab_padding_does_not_change_loss(vocab, padded):
+    """Masked-CE invariant: padded logit columns never affect the loss."""
+    key = jax.random.PRNGKey(vocab)
+    logits = jax.random.normal(key, (2, 8, padded))
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (2, 8), 0,
+                                vocab)
+    base = cross_entropy(logits[..., :vocab], labels)
+    padded_loss = cross_entropy(
+        logits.at[..., vocab:].set(1e4), labels, n_valid=vocab)
+    np.testing.assert_allclose(float(base), float(padded_loss), rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 16))
+def test_hlo_while_multiplier(trips, width):
+    """The analyzer multiplies while-body work by the trip count."""
+    def f(x, w):
+        def body(c, wi):
+            return c @ wi, None
+        c, _ = jax.lax.scan(body, x, w)
+        return c
+    x = jax.ShapeDtypeStruct((width * 8, width * 8), jnp.float32)
+    w = jax.ShapeDtypeStruct((trips, width * 8, width * 8), jnp.float32)
+    txt = jax.jit(f).lower(x, w).compile().as_text()
+    ana = H.analyze(txt)
+    expected = 2.0 * trips * (width * 8) ** 3
+    assert abs(ana["flops"] - expected) / expected < 0.05

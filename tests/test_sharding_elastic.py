@@ -1,0 +1,211 @@
+"""Multi-device sharding + elastic-resize tests.
+
+These run in subprocesses because the placeholder host-device count must
+be set before jax initializes (and the main test process must keep seeing
+exactly one device)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ENV = {**os.environ, "PYTHONPATH": "src"}
+
+
+def _run(code: str, devices: int = 8) -> subprocess.CompletedProcess:
+    prog = (f"import os\n"
+            f"os.environ['XLA_FLAGS'] = "
+            f"'--xla_force_host_platform_device_count={devices}'\n"
+            + textwrap.dedent(code))
+    return subprocess.run([sys.executable, "-c", prog],
+                          capture_output=True, text=True, env=ENV,
+                          cwd=os.getcwd(), timeout=560)
+
+
+def test_sharded_train_step_runs_on_debug_mesh():
+    r = _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config
+    from repro.models import Model, unzip
+    from repro.optim import AdamWConfig, init_opt_state
+    from repro.launch.steps import make_train_step
+    from repro.launch.mesh import make_debug_mesh
+    from repro.distributed.sharding import make_rules, shardings_for, batch_shardings
+    from repro.distributed.meshctx import MeshPolicy, use_policy
+
+    cfg = get_config("phi3.5-moe-42b-a6.6b").smoke()
+    model = Model(cfg)
+    mesh = make_debug_mesh(2, 2)
+    rules = make_rules(False, fsdp=True)
+    policy = MeshPolicy(mesh=mesh, batch_axes=("data",), rules=rules)
+    with use_policy(policy), mesh:
+        pspec = model.init(jax.random.PRNGKey(0))
+        params, _ = unzip(pspec)
+        opt_pspec = init_opt_state(pspec)
+        opt, _ = unzip(opt_pspec)
+        state = {"params": params, "opt": opt}
+        state_sh = {"params": shardings_for(pspec, mesh, rules),
+                    "opt": shardings_for(opt_pspec, mesh, rules)}
+        state = jax.device_put(state, state_sh)
+        batch = {"tokens": jnp.zeros((4, 16), jnp.int32),
+                 "labels": jnp.zeros((4, 16), jnp.int32)}
+        step = jax.jit(make_train_step(model, AdamWConfig()),
+                       in_shardings=(state_sh, None),
+                       out_shardings=(state_sh, None),
+                       donate_argnums=(0,))
+        state, metrics = step(state, batch)
+        loss = float(metrics["loss"])
+        assert np.isfinite(loss), loss
+        # expert weights actually sharded over the model axis
+        w1 = state["params"]["blocks"]["pos0"]["ffn"]["w1"]
+        assert len(w1.sharding.device_set) == 4 or \
+            "model" in str(w1.sharding.spec)
+        print("OK", loss)
+    """)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout
+
+
+def test_elastic_resize_restore(tmp_path):
+    """Checkpoint on a (2,2) mesh, restore onto (4,2) — the ZeRO-sharded
+    optimizer state reshards on device_put."""
+    r = _run(f"""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config
+    from repro.models import Model, unzip
+    from repro.optim import AdamWConfig, init_opt_state
+    from repro.launch.mesh import make_debug_mesh
+    from repro.distributed.sharding import make_rules, shardings_for
+    from repro.checkpoint import save, restore
+
+    cfg = get_config("llama3-8b").smoke()
+    model = Model(cfg)
+    rules = make_rules(False, fsdp=True)
+
+    mesh1 = make_debug_mesh(2, 2)
+    pspec = model.init(jax.random.PRNGKey(0))
+    params, _ = unzip(pspec)
+    sh1 = shardings_for(pspec, mesh1, rules)
+    params1 = jax.device_put(params, sh1)
+    save({str(tmp_path)!r}, 1, params1)
+
+    mesh2 = make_debug_mesh(4, 2)
+    sh2 = shardings_for(pspec, mesh2, rules)
+    params2, meta = restore({str(tmp_path)!r}, None, params, shardings=sh2)
+    for a, b in zip(jax.tree.leaves(params1), jax.tree.leaves(params2)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    leaf = jax.tree.leaves(params2)[3]
+    assert len(leaf.sharding.device_set) == 8
+    print("OK elastic")
+    """)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK elastic" in r.stdout
+
+
+def test_moe_sharded_matches_local():
+    """EP all-to-all shard_map MoE == single-device dropless oracle."""
+    r = _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.models.moe import moe_ffn_local, moe_ffn_sharded
+    from repro.models.config import MoEConfig
+    from repro.models.params import Initializer, unzip
+    from repro.launch.mesh import make_debug_mesh
+    from repro.distributed.meshctx import MeshPolicy, use_policy
+
+    moe = MoEConfig(num_experts=4, top_k=2, expert_d_ff=32,
+                    capacity_factor=4.0)   # high cf => no drops
+    ini = Initializer(jax.random.PRNGKey(0), dtype=jnp.float32)
+    d = 16
+    params = {
+        "w_router": ini.normal((d, 4), (None, None), dtype=jnp.float32),
+        "b_router": ini.zeros((4,), (None,), dtype=jnp.float32),
+        "w1": ini.normal((4, d, 32), (None, None, None)),
+        "w3": ini.normal((4, d, 32), (None, None, None)),
+        "w2": ini.normal((4, 32, d), (None, None, None)),
+    }
+    params = {k: v.value for k, v in params.items()}
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, d), jnp.float32)
+
+    y_local, m_local = moe_ffn_local(params, x, moe)
+
+    mesh = make_debug_mesh(2, 2)
+    policy = MeshPolicy(mesh=mesh, batch_axes=("data",))
+    with use_policy(policy), mesh:
+        y_sh, m_sh = moe_ffn_sharded(params, x, moe)
+    err = float(jnp.abs(y_local - y_sh).max())
+    drops = float(m_sh["dropped"])
+    assert drops == 0.0, drops
+    assert err < 1e-4, err
+    print("OK moe", err)
+    """)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK moe" in r.stdout
+
+
+def test_gqa_seq_parallel_decode_matches_reference():
+    """Sequence-parallel flash decode == single-device blocked attention."""
+    r = _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.models.attention import attend_blocked, _gqa_decode_seq_parallel
+    from repro.launch.mesh import make_debug_mesh
+    from repro.distributed.meshctx import MeshPolicy
+
+    key = jax.random.PRNGKey(0)
+    B, Sk, H, Hkv, D = 4, 64, 8, 2, 16
+    q = jax.random.normal(key, (B, 1, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, Sk, Hkv, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, Sk, Hkv, D))
+    kv_pos = jnp.arange(Sk, dtype=jnp.int32)
+    positions = jnp.array([Sk - 1], jnp.int32)
+
+    ref = attend_blocked(q, k, v, q_pos=positions, kv_pos=kv_pos,
+                         causal=True, block=16)
+    mesh = make_debug_mesh(2, 4)
+    pol = MeshPolicy(mesh=mesh, batch_axes=("data",))
+    with mesh:
+        out = _gqa_decode_seq_parallel(pol, q, k, v, kv_pos, positions,
+                                       window=None, logit_softcap=0.0)
+    err = float(jnp.abs(out - ref).max())
+    assert err < 1e-5, err
+    # windowed variant
+    ref_w = attend_blocked(q, k, v, q_pos=positions, kv_pos=kv_pos,
+                           causal=True, window=20, block=16)
+    with mesh:
+        out_w = _gqa_decode_seq_parallel(pol, q, k, v, kv_pos, positions,
+                                         window=20, logit_softcap=0.0)
+    err_w = float(jnp.abs(out_w - ref_w).max())
+    assert err_w < 1e-5, err_w
+    print("OK gqa-sp", err, err_w)
+    """)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK gqa-sp" in r.stdout
+
+
+def test_hlo_analyzer_counts_collectives():
+    """The roofline's collective term comes from the HLO parser — verify
+    it sees a known psum's bytes on a real multi-device compile."""
+    r = _run("""
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_debug_mesh
+    from repro.launch import hlo_analysis as H
+
+    mesh = make_debug_mesh(4, 2)
+    def f(x):
+        def body(xl):
+            return jax.lax.psum(xl, "data")
+        return jax.shard_map(body, mesh=mesh, in_specs=P("data", None),
+                             out_specs=P(None, None), check_vma=False)(x)
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    with mesh:
+        txt = jax.jit(f).lower(x).compile().as_text()
+    ana = H.analyze(txt)
+    # per-device operand: (64/4) x 128 x 4B = 8192 bytes
+    assert ana["collective_bytes"] >= 8192, ana["collective_bytes"]
+    assert ana["per_collective"]["all-reduce"] >= 8192
+    print("OK analyzer", ana["collective_bytes"])
+    """)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK analyzer" in r.stdout

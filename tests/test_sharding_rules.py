@@ -1,0 +1,59 @@
+"""Unit tests for the logical-axis -> mesh-axis resolver (pure; no
+devices needed — Mesh is built abstractly)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.distributed.sharding import make_rules, spec_for
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+RULES = make_rules(False, fsdp=True)
+RULES3 = make_rules(True, fsdp=True)
+
+
+def test_tp_and_fsdp_assignment():
+    # (embed, mlp) weight: embed->data (FSDP), mlp->model (TP)
+    assert spec_for(("embed", "mlp"), RULES, MESH, (4096, 14336)) == \
+        P("data", "model")
+
+
+def test_axis_used_once_per_array():
+    # (experts, embed, mlp): experts takes model first; mlp must not reuse
+    spec = spec_for(("experts", "embed", "mlp"), RULES, MESH,
+                    (160, 5120, 1536))
+    assert spec == P("model", "data")           # trailing None trimmed
+
+
+def test_divisibility_fallback():
+    # 8 kv heads cannot shard 16 ways -> replicated
+    assert spec_for(("kv_heads", "head_dim"), RULES, MESH, (8, 128)) == P()
+    # vocab not divisible by 16 -> falls through model AND data -> None
+    assert spec_for(("vocab", "embed"), RULES, MESH, (50280, 2048)) == \
+        P(None, "data")
+
+
+def test_seq_kv_takes_both_axes_when_batch_absent():
+    # long_500k: batch=1 unshardable => seq gets data AND model (256-way)
+    spec = spec_for(("batch", "seq_kv", "kv_heads", "head_dim"), RULES,
+                    MESH, (1, 524288, 8, 128))
+    assert spec == P(None, ("data", "model"))
+
+
+def test_seq_kv_model_only_when_batch_holds_data():
+    spec = spec_for(("batch", "seq_kv", "kv_heads", "head_dim"), RULES,
+                    MESH, (128, 32768, 8, 128))
+    assert spec == P("data", "model")
+
+
+def test_multipod_batch_spans_pod_and_data():
+    spec = spec_for(("batch", None, None), RULES3, MESH3, (256, 4096, 1))
+    assert spec == P(("pod", "data"))
+
+
+def test_kv_lora_never_takes_model():
+    # contraction dim: model-sharding it costs a psum per flash block
+    spec = spec_for(("kv_lora", "q_heads", "head_dim"), RULES, MESH,
+                    (512, 128, 128))
+    assert spec == P("data", "model")
