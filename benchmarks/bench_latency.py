@@ -60,9 +60,8 @@ def run(steps: int = 60) -> list:
     rows.append(("fig7/optimized/p50", np.percentile(lat, 50) * 1e6,
                  f"p99_us={np.percentile(lat, 99)*1e6:.0f}"))
 
-    base = _lat(lambda b: rt.generic_exec(
-        rt.params, rt.table_state, rt.instr_state, rt.guards, b)[0],
-        batches)                            # forced deopt path
+    rt.tables.version += 1                  # hold the program guard open
+    base = _lat(rt.step, batches)           # forced deopt path
     rows.append(("fig7/deopt/p50", np.percentile(base, 50) * 1e6,
                  f"p99_us={np.percentile(base, 99)*1e6:.0f}"))
     rows.append(("fig7/p99_reduction", 0.0,

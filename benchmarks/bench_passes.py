@@ -29,17 +29,16 @@ from repro.serving import ServeConfig, build_params, build_tables, \
 from ._util import Row, emit, time_steps
 
 STAGES = [
-    ("generic", (), False, False),
-    ("+table_elim", ("eliminated",), False, False),
-    ("+const_prop", ("eliminated", "const_row", "inline_const"), False,
-     False),
-    ("+dce", ("eliminated", "const_row", "inline_const"), True, False),
+    ("generic", (), False),
+    ("+table_elim", ("eliminated",), False),
+    ("+const_prop", ("eliminated", "const_row", "inline_const"), False),
+    ("+dce", ("eliminated", "const_row", "inline_const"), True),
     ("+dstruct", ("eliminated", "const_row", "inline_const", "onehot"),
-     True, False),
+     True),
     ("+fastpath", ("eliminated", "const_row", "inline_const", "onehot",
-                   "hot_cache"), True, False),
+                   "hot_cache"), True),
     ("+moe_hot", ("eliminated", "const_row", "inline_const", "onehot",
-                  "hot_cache"), True, True),
+                  "hot_cache", "moe_fastpath"), True),
 ]
 
 
@@ -62,27 +61,26 @@ def run(steps: int = 40) -> list:
                for i in range(steps)]
     for b in batches[:16]:
         rt.step(b)
-    full_plan, _, _ = rt.engine.build_plan(rt.instr_state)
+    full_plan, _, _ = rt.engine.build_plan(rt.state.instr)
 
     rows: list = []
-    args = (rt.params, rt.table_state, rt.instr_state, rt.guards,
-            batches[0])
-    for name, impls, dce, moe_hot in STAGES:
+    args = (rt.params, rt.state, batches[0])
+    for name, impls, dce in STAGES:
         sites = tuple((sid, s) for sid, s in full_plan.sites
                       if s.impl in impls)
         flags = dict(full_plan.flags)
         flags["vision_enabled"] = not dce
-        if not moe_hot:
-            flags.pop("__moe_hot__", None)
         plan = SpecializationPlan(version=rt.tables.version, sites=sites,
                                   flags=flags, label=name)
         step = rt.engine.make_step_fn(plan)
         jx = jax.make_jaxpr(step)(*args)
         n_eqns = len(jx.jaxpr.eqns)
         compiled = jax.jit(step).lower(*args).compile()
-        flops = (compiled.cost_analysis() or {}).get("flops", 0.0)
-        exe = lambda b: compiled(rt.params, rt.table_state,
-                                 rt.instr_state, rt.guards, b)[0]
+        cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):    # older JAX: per-device list
+            cost = cost[0] if cost else {}
+        flops = cost.get("flops", 0.0)
+        exe = lambda b: compiled(rt.params, rt.state, b)[0]
         times = time_steps(exe, batches)
         rows.append((f"fig2/{name}", times.mean() * 1e6,
                      f"req_per_s={8/times.mean():.1f};eqns={n_eqns}"

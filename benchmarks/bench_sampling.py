@@ -41,8 +41,8 @@ def run(steps: int = 48) -> list:
         times = time_steps(rt.step, batches)
         times_med = np.median(times)
         # detection quality: hot-expert coverage seen by the sketch
-        site = [s for s in rt.instr_state if s.startswith("router")][0]
-        hot, cov, total = instrument.hot_keys(rt.instr_state[site],
+        site = [s for s in rt.state.instr if s.startswith("router")][0]
+        hot, cov, total = instrument.hot_keys(rt.state.instr[site],
                                               sk)
         rows.append((f"fig9/every_{every}", times_med * 1e6,
                      f"sample_pct={100/every:.0f};coverage={cov:.2f}"

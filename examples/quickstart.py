@@ -55,10 +55,10 @@ print(f"generic     {1e3*t_generic:7.2f} ms/batch")
 print(f"specialized {1e3*t_specialized:7.2f} ms/batch "
       f"({t_generic/t_specialized:.2f}x)")
 
-# semantics: specialized == generic
+# semantics: specialized == generic (run_generic replays the generic
+# executable against a copy of the live PlaneState)
 b = make_request_batch(cfg, jax.random.PRNGKey(999), 8, "high")
 out_s = runtime.step(b)
-out_g, *_ = runtime.generic_exec(runtime.params, runtime.table_state,
-                                 runtime.instr_state, runtime.guards, b)
+out_g = runtime.run_generic(b)
 print("max |specialized - generic| =",
       float(jnp.abs(out_s - out_g).max()))

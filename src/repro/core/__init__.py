@@ -2,6 +2,8 @@
 from .ctx import DataPlaneCtx
 from .engine import EngineConfig, MorpheusEngine
 from .instrument import AdaptiveController, SketchConfig
+from .passes import PassRegistry, SpecializationPass, default_registry
 from .runtime import MorpheusRuntime, RuntimeStats
 from .specialize import GENERIC_PLAN, SiteSpec, SpecializationPlan
+from .state import PlaneState
 from .tables import Table, TableSet

@@ -1,4 +1,4 @@
-"""DataPlaneCtx — what the step function sees.
+"""DataPlaneCtx — the single data-plane API.
 
 User data-plane code (serving step, train step) is written against this
 context instead of raw arrays:
@@ -9,31 +9,34 @@ context instead of raw arrays:
             ...
         ctx.update("sessions", batch["slot"], {...})
 
-The ctx carries the active SpecializationPlan (trace-time!), the table
-device state, the instrumentation sketches and the RW guards; lookups
-dispatch through the plan and fold instrumentation in when this trace is
-the instrumented variant.
+The ctx carries the active SpecializationPlan (trace-time!) and the
+:class:`~repro.core.state.PlaneState` — tables, instrumentation sketches
+and RW guards; lookups dispatch through the plan and fold instrumentation
+in when this trace is the instrumented variant.
+
+Flags and plan flags are keyed by flag *name* (not by site id): the same
+feature consulted at two call sites is one control-plane fact and pins
+both branches together.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from . import instrument, tables as T
 from .specialize import dispatch_lookup
+from .state import PlaneState
 
 
 class DataPlaneCtx:
-    def __init__(self, plan, table_state: Dict[str, Dict[str, jax.Array]],
-                 instr_state: Dict[str, Dict[str, jax.Array]],
-                 guards: Dict[str, jax.Array],
+    def __init__(self, plan, state: PlaneState,
                  sketch_cfg: instrument.SketchConfig):
         self.plan = plan
-        self.table_state = dict(table_state)
-        self.instr_state = dict(instr_state)
-        self.guards = dict(guards)
+        self.tables = dict(state.tables)
+        self.instr = dict(state.instr)
+        self.guards = dict(state.guards)
         self.sketch_cfg = sketch_cfg
 
     # ---- data-plane API ---------------------------------------------------
@@ -41,10 +44,10 @@ class DataPlaneCtx:
                fields: Optional[Tuple[str, ...]] = None):
         site_id = T._register(name, "lookup", fields or ())
         if (self.plan is not None and self.plan.instrumented
-                and site_id in self.instr_state):
-            self.instr_state[site_id] = instrument.record(
-                self.instr_state[site_id], idx, self.sketch_cfg)
-        return dispatch_lookup(self.plan, site_id, name, self.table_state,
+                and site_id in self.instr):
+            self.instr[site_id] = instrument.record(
+                self.instr[site_id], idx, self.sketch_cfg)
+        return dispatch_lookup(self.plan, site_id, name, self.tables,
                                idx, fields, self.guards)
 
     def lookup_or_none(self, name: str, idx: jax.Array,
@@ -58,29 +61,38 @@ class DataPlaneCtx:
         if spec is not None and spec.impl == "eliminated":
             return None
         if (self.plan is not None and self.plan.instrumented
-                and site_id in self.instr_state):
-            self.instr_state[site_id] = instrument.record(
-                self.instr_state[site_id], idx, self.sketch_cfg)
-        return dispatch_lookup(self.plan, site_id, name, self.table_state,
+                and site_id in self.instr):
+            self.instr[site_id] = instrument.record(
+                self.instr[site_id], idx, self.sketch_cfg)
+        return dispatch_lookup(self.plan, site_id, name, self.tables,
                                idx, fields, self.guards)
 
     def update(self, name: str, idx: jax.Array,
                values: Dict[str, jax.Array]) -> None:
         T._register(name, "update")
-        state = dict(self.table_state[name])
+        state = dict(self.tables[name])
         for k, v in values.items():
             state[k] = state[k].at[idx].set(v.astype(state[k].dtype))
-        self.table_state[name] = state
+        self.tables[name] = state
         if name in self.guards:
             # invalidate the site guard in the same step (§4.3.6)
             self.guards[name] = jnp.ones_like(self.guards[name])
 
     def flag(self, name: str, default: bool = True):
-        site_id = T._register(name, "flag")
+        T._register(name, "flag")
         plan_flags = getattr(self.plan, "flags", None) or {}
         if name in plan_flags:
             return plan_flags[name]       # trace-time constant -> DCE
         return default
 
-    def outputs(self):
-        return self.table_state, self.instr_state, self.guards
+    def hot_experts(self, table: str) -> Optional[Tuple[int, ...]]:
+        """Hot set the MoE fast-path pass planned for ``table``'s lookup
+        site (branch injection, §4.3.5), or None when the pass did not
+        fire.  A trace-time constant: the caller's hot path is compiled in
+        or left out entirely."""
+        if self.plan is None:
+            return None
+        return self.plan.hot_experts(table)
+
+    def outputs(self) -> PlaneState:
+        return PlaneState(self.tables, self.instr, self.guards)

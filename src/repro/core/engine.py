@@ -1,11 +1,19 @@
 """The Morpheus compilation pipeline (§4, Fig. 3).
 
-    analyze (offline, once)  ->  read instrumentation  ->  plan passes
-    ->  trace + XLA-compile the specialized executable  ->  hand to the
-    runtime for the atomic swap.
+    analyze (offline, once)  ->  read instrumentation  ->  run the pass
+    registry  ->  trace + XLA-compile the specialized executable  ->
+    hand to the runtime for the atomic swap.
 
 Timing mirrors Table 3: ``t1`` = analysis + table/sketch read + pass
 planning; ``t2`` = trace + XLA compile of the specialized executable.
+
+The step function's contract is::
+
+    step(params, state: PlaneState, batch) -> (out, PlaneState)
+
+One pytree in, one pytree out — which is what lets ``compile`` donate
+the state argument (buffer reuse across steps) and accept per-leaf
+sharding specs (a PlaneState of Shardings is a valid jit prefix).
 """
 from __future__ import annotations
 
@@ -19,9 +27,9 @@ import numpy as np
 from . import instrument
 from .ctx import DataPlaneCtx
 from .instrument import SketchConfig
-from .passes import plan_moe_fastpath, plan_sites
-from .passes.dead_code import plan_flags
+from .passes import PassRegistry, PlanInputs, default_registry
 from .specialize import GENERIC_PLAN, SpecializationPlan
+from .state import PlaneState
 from .tables import TableSet, analysis_sites, analyzing, \
     reset_site_counters
 
@@ -31,6 +39,8 @@ class EngineConfig:
     sketch: SketchConfig = field(default_factory=SketchConfig)
     features: Dict[str, bool] = field(default_factory=dict)
     moe_router_table: Optional[str] = None   # table backing MoE routing
+    passes: Optional[PassRegistry] = None    # None => default_registry
+    donate: bool = True                      # donate PlaneState buffers
 
 
 class MorpheusEngine:
@@ -41,6 +51,8 @@ class MorpheusEngine:
         self.user_step = user_step
         self.tables = tables
         self.cfg = cfg or EngineConfig()
+        self.registry = (self.cfg.passes if self.cfg.passes is not None
+                         else default_registry(self.cfg.moe_router_table))
         self.sites = []
         self.mutability: Dict[str, str] = {}
         self._analyzed = False
@@ -48,14 +60,11 @@ class MorpheusEngine:
     # ---- §4.1 static code analysis ---------------------------------------
     def analyze(self, params, example_batch) -> Dict[str, Any]:
         t0 = time.time()
-        table_state = self.tables.device_state()
-        instr_state = {}
-        guards = {}
+        state = PlaneState(self.tables.device_state(), {}, {})
 
         def traced(p, b):
             reset_site_counters()
-            ctx = DataPlaneCtx(GENERIC_PLAN, table_state, instr_state,
-                               guards, self.cfg.sketch)
+            ctx = DataPlaneCtx(GENERIC_PLAN, state, self.cfg.sketch)
             out = self.user_step(p, ctx, b)
             return out
 
@@ -96,39 +105,38 @@ class MorpheusEngine:
         return {name: jnp.zeros((1,), jnp.int32)
                 for name, mut in self.mutability.items() if mut == "rw"}
 
-    # ---- §4.2 + §4.3: read instrumentation, run passes ---------------------
+    def init_state(self) -> PlaneState:
+        """Fresh device state for this data plane (run analyze first)."""
+        assert self._analyzed
+        return PlaneState(self.tables.device_state(),
+                          self.init_instr_state(), self.init_guards())
+
+    # ---- §4.2 + §4.3: read instrumentation, run the registry ---------------
     def build_plan(self, instr_state, instrumented: bool = False
                    ) -> Tuple[SpecializationPlan, float, Dict]:
         assert self._analyzed
         t0 = time.time()
         snapshot = self.tables.snapshot()
         hot_stats = {}
-        hot_by_table = {}
         for sid, st in (instr_state or {}).items():
             hot, cov, total = instrument.hot_keys(st, self.cfg.sketch)
             hot_stats[sid] = (hot, cov)
-            hot_by_table[sid.split("#")[0]] = (hot, cov)
 
-        specs, stats = plan_sites(self.sites, snapshot, self.mutability,
-                                  hot_stats, self.cfg.sketch)
-        flags = plan_flags(self.cfg.features)
-
-        moe_hot = None
-        if self.cfg.moe_router_table in hot_by_table:
-            hot, cov = hot_by_table[self.cfg.moe_router_table]
-            moe_hot = plan_moe_fastpath(hot, cov, self.cfg.sketch)
-        if moe_hot is not None:
-            flags = dict(flags)
-            flags["__moe_hot__"] = moe_hot
+        inputs = PlanInputs(mutability=dict(self.mutability),
+                            hot_stats=hot_stats, sketch=self.cfg.sketch,
+                            features=dict(self.cfg.features))
+        draft = self.registry.build(self.sites, snapshot, inputs)
+        specs = {sid: spec for sid, spec in draft.specs.items()
+                 if spec is not None}
 
         plan = SpecializationPlan(
             version=self.tables.version,
             sites=tuple(sorted(specs.items())),
-            flags=flags,
+            flags=dict(draft.flags),
             instrumented=instrumented,
             label="specialized" + ("+instr" if instrumented else ""),
         )
-        return plan, time.time() - t0, stats
+        return plan, time.time() - t0, dict(draft.stats)
 
     def generic_plan(self, instrumented: bool = False) -> SpecializationPlan:
         return SpecializationPlan(
@@ -138,22 +146,35 @@ class MorpheusEngine:
 
     # ---- step-function construction + compile ------------------------------
     def make_step_fn(self, plan: SpecializationPlan) -> Callable:
-        def step(params, table_state, instr_state, guards, batch):
+        def step(params, state: PlaneState, batch):
             reset_site_counters()
-            ctx = DataPlaneCtx(plan, table_state, instr_state, guards,
-                               self.cfg.sketch)
+            ctx = DataPlaneCtx(plan, state, self.cfg.sketch)
             out = self.user_step(params, ctx, batch)
-            ts, ins, gs = ctx.outputs()
-            return out, ts, ins, gs
+            return out, ctx.outputs()
         return step
 
-    def compile(self, plan: SpecializationPlan, params, table_state,
-                instr_state, guards, batch) -> Tuple[Callable, float]:
-        """AOT compile; returns (callable executable, t2 seconds)."""
+    def compile(self, plan: SpecializationPlan, params, state: PlaneState,
+                batch, *, donate: Optional[bool] = None,
+                in_shardings=None, out_shardings=None
+                ) -> Tuple[Callable, float]:
+        """AOT compile; returns (callable executable, t2 seconds).
+
+        The PlaneState argument is donated by default (cfg.donate): the
+        executable may write the new state into the old state's buffers.
+        ``in_shardings``/``out_shardings`` pass through to ``jax.jit``
+        (prefix pytrees over ``(params, state, batch)`` / the
+        ``(out, state)`` result) for per-leaf placement."""
         t0 = time.time()
         step = self.make_step_fn(plan)
-        jitted = jax.jit(step)
-        lowered = jitted.lower(params, table_state, instr_state, guards,
-                               batch)
+        donate = self.cfg.donate if donate is None else donate
+        kw: Dict[str, Any] = {}
+        if donate:
+            kw["donate_argnums"] = (1,)
+        if in_shardings is not None:
+            kw["in_shardings"] = in_shardings
+        if out_shardings is not None:
+            kw["out_shardings"] = out_shardings
+        jitted = jax.jit(step, **kw)
+        lowered = jitted.lower(params, state, batch)
         compiled = lowered.compile()
         return compiled, time.time() - t0

@@ -1,15 +1,43 @@
 """Morpheus optimization passes (§4.3, Table 2).
 
-Each pass proposes a per-site decision given (table snapshot, mutability,
-instrumentation stats).  ``plan_sites`` composes them in priority order:
+Each pass is a :class:`~repro.core.passes.registry.SpecializationPass`
+registered in an ordered :class:`~repro.core.passes.registry.PassRegistry`
+(``match(site) -> bool``, ``plan(site, snapshot, stats) -> SiteSpec | None``,
+optional plan-level ``finalize``).  The default pipeline composes them in
+priority order:
 
   table elimination > inline JIT > constant propagation >
-  data-structure specialization > traffic-dependent fast path.
+  MoE branch injection > traffic-dependent fast path >
+  data-structure specialization
 
-Guard elision (§4.3.6) runs last and decorates the chosen impls.
-Dead-code elimination (flags) and branch injection (MoE fast path) operate
-at the plan level, see ``dead_code.py`` / ``branch_inject.py``.
+Dead-code elimination (flag pinning) and guard elision (§4.3.6) are
+plan-level passes that run in ``finalize``.  Operators extend the
+pipeline with ``registry.register(MyPass(), before="fastpath")``.
 """
-from .branch_inject import plan_moe_fastpath
-from .compose import plan_sites
-from .dead_code import plan_flags
+from typing import Optional
+
+from .branch_inject import MoEFastPathPass, moe_ffn_hotpath, \
+    plan_moe_fastpath
+from .const_prop import ConstPropPass
+from .dead_code import DeadCodePass
+from .dstruct import DStructPass
+from .fastpath import TrafficFastPathPass
+from .guard_elision import GuardElisionPass
+from .registry import PassRegistry, PlanDraft, PlanInputs, \
+    SpecializationPass
+from .table_jit import InlineJITPass, TableEliminationPass
+
+
+def default_registry(moe_router_table: Optional[str] = None
+                     ) -> PassRegistry:
+    """The paper's pipeline, in priority order."""
+    return PassRegistry((
+        TableEliminationPass(),
+        InlineJITPass(),
+        ConstPropPass(),
+        MoEFastPathPass(moe_router_table),
+        TrafficFastPathPass(),
+        DStructPass(),
+        DeadCodePass(),
+        GuardElisionPass(),
+    ))

@@ -23,6 +23,8 @@ import numpy as np
 from ...models.config import ModelConfig
 from ...models.moe import _expert_compute, route
 from ..instrument import SketchConfig
+from ..specialize import SiteSpec
+from .registry import SpecializationPass
 
 
 def plan_moe_fastpath(hot: np.ndarray, coverage: float,
@@ -30,6 +32,31 @@ def plan_moe_fastpath(hot: np.ndarray, coverage: float,
     if len(hot) == 0 or coverage < cfg.hot_coverage:
         return None
     return tuple(int(k) for k in hot)
+
+
+class MoEFastPathPass(SpecializationPass):
+    """Claims the router table's lookup site with a ``moe_fastpath``
+    SiteSpec whose ``hot_keys`` are the heavy-hitter experts.  The data
+    plane reads them back via ``ctx.hot_experts(table)`` and traces the
+    branch-injected dense hot path; the router lookup itself dispatches
+    as a plain gather."""
+
+    name = "moe_fastpath"
+
+    def __init__(self, router_table: Optional[str]):
+        self.router_table = router_table
+
+    def match(self, site):
+        return (site.kind == "lookup"
+                and self.router_table is not None
+                and site.table == self.router_table)
+
+    def plan(self, site, snapshot, stats):
+        hot, coverage = stats.hot_for(site.site_id)
+        keys = plan_moe_fastpath(hot, coverage, stats.sketch)
+        if keys is None:
+            return None
+        return SiteSpec(impl="moe_fastpath", hot_keys=keys)
 
 
 def moe_ffn_hotpath(params, x2d: jax.Array, cfg: ModelConfig,

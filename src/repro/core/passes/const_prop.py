@@ -13,7 +13,16 @@ import numpy as np
 
 from ..specialize import SiteSpec
 from ..tables import Table
+from .registry import SpecializationPass
 from .table_jit import _Frozen
+
+
+class ConstPropPass(SpecializationPass):
+    name = "const_row"
+
+    def plan(self, site, snapshot, stats):
+        return propose_const_row(snapshot[site.table],
+                                 stats.mut(site.table))
 
 
 def constant_fields(table: Table) -> Dict[str, np.ndarray]:

@@ -18,6 +18,16 @@ import numpy as np
 
 from ..specialize import SiteSpec
 from ..tables import Table
+from .registry import SpecializationPass
+
+
+class DStructPass(SpecializationPass):
+    name = "onehot"
+
+    def plan(self, site, snapshot, stats):
+        return propose_dstruct(snapshot[site.table],
+                               stats.mut(site.table))
+
 
 MXU_FLOPS = 197e12          # bf16
 HBM_BW = 819e9

@@ -14,6 +14,17 @@ import numpy as np
 from ..instrument import SketchConfig
 from ..specialize import SiteSpec
 from ..tables import Table
+from .registry import SpecializationPass
+
+
+class TrafficFastPathPass(SpecializationPass):
+    name = "fastpath"
+
+    def plan(self, site, snapshot, stats):
+        hot, coverage = stats.hot_for(site.site_id)
+        return propose_fastpath(snapshot[site.table],
+                                stats.mut(site.table), hot, coverage,
+                                stats.sketch)
 
 
 def propose_fastpath(table: Table, mutability: str, hot: np.ndarray,

@@ -7,6 +7,21 @@ import numpy as np
 
 from ..specialize import SiteSpec
 from ..tables import Table
+from .registry import SpecializationPass
+
+
+class TableEliminationPass(SpecializationPass):
+    name = "eliminated"
+
+    def plan(self, site, snapshot, stats):
+        return propose_eliminate(snapshot[site.table])
+
+
+class InlineJITPass(SpecializationPass):
+    name = "inlined"
+
+    def plan(self, site, snapshot, stats):
+        return propose_inline(snapshot[site.table], stats.mut(site.table))
 
 
 def propose_eliminate(table: Table) -> Optional[SiteSpec]:

@@ -13,20 +13,30 @@ The runtime owns the executables and plays the role of the eBPF
   * **atomic update**: recompilation happens on a background thread;
     control-plane updates arriving mid-compile are queued and replayed
     after the swap; the swap itself is a Python reference assignment.
+
+Device state lives in one :class:`PlaneState` pytree (``runtime.state``)
+threaded through every executable; the executables donate its buffers, so
+after a step the *previous* state must be treated as consumed.  All
+``runtime.state`` transitions happen under the runtime lock — a step's
+execute+commit is one critical section, so the control plane and the
+background recompile never observe (or replace) a half-donated state.
+For semantics checks use :meth:`run_generic`, a non-donating twin of the
+generic executable; when replaying a *donating* executable by hand, pass
+it ``state.copy()``.
 """
 from __future__ import annotations
 
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
-import numpy as np
 
 from .engine import EngineConfig, MorpheusEngine
 from .instrument import AdaptiveController
 from .specialize import SpecializationPlan
+from .state import PlaneState
 from .tables import TableSet
 
 
@@ -56,9 +66,7 @@ class MorpheusRuntime:
         self.controller = AdaptiveController(self.engine.cfg.sketch)
 
         self.analysis = self.engine.analyze(params, example_batch)
-        self.table_state = tables.device_state()
-        self.instr_state = self.engine.init_instr_state()
-        self.guards = self.engine.init_guards()
+        self.state: PlaneState = self.engine.init_state()
 
         self._execs: Dict[Any, Callable] = {}
         self._lock = threading.Lock()
@@ -74,14 +82,14 @@ class MorpheusRuntime:
         self.exec = self.generic_exec
         self.instr_exec = self.generic_instr_exec
         self._example_batch = example_batch
+        self._generic_oracles: Dict[Any, Callable] = {}
 
     # ------------------------------------------------------------------
     def _get_exec(self, plan: SpecializationPlan, batch) -> Callable:
         key = plan.key
         if key not in self._execs:
-            compiled, t2 = self.engine.compile(
-                plan, self.params, self.table_state, self.instr_state,
-                self.guards, batch)
+            compiled, t2 = self.engine.compile(plan, self.params,
+                                               self.state, batch)
             self.stats.t2_history.append(t2)
             self._execs[key] = compiled
         return self._execs[key]
@@ -91,18 +99,46 @@ class MorpheusRuntime:
         self.stats.steps += 1
         # program-level guard: ONE host compare covers every RO table
         if self.tables.version != self.plan.version:
-            exec_, plan = self.generic_exec, self.generic_plan
+            exec_ = self.generic_exec
             self.stats.deopt_steps += 1
         elif self.enable and self.controller.should_sample(self.stats.steps):
-            exec_, plan = self.instr_exec, self.plan
+            exec_ = self.instr_exec
             self.stats.instr_steps += 1
         else:
-            exec_, plan = self.exec, self.plan
+            exec_ = self.exec
 
-        out, ts, ins, gs = exec_(self.params, self.table_state,
-                                 self.instr_state, self.guards, batch)
-        self.table_state, self.instr_state, self.guards = ts, ins, gs
+        # execute + commit under the lock: the executable donates the
+        # state's buffers, so nobody may read or replace self.state
+        # between dispatch and the commit of the fresh state.
+        with self._lock:
+            out, self.state = exec_(self.params, self.state, batch)
         return out
+
+    def run_generic(self, batch):
+        """Replay ``batch`` through the generic plan WITHOUT committing
+        state — the reference-semantics oracle.  Uses a non-donating
+        twin of the generic executable (compiled per batch shape) so the
+        live state is neither consumed nor copied."""
+        leaves, treedef = jax.tree_util.tree_flatten(batch)
+        key = (treedef, tuple((tuple(l.shape), str(l.dtype))
+                              for l in leaves))
+        if key not in self._generic_oracles:
+            self._generic_oracles[key], _ = self.engine.compile(
+                self.generic_plan, self.params, self.state, batch,
+                donate=False)
+        with self._lock:
+            out, _ = self._generic_oracles[key](self.params, self.state,
+                                                batch)
+        return out
+
+    def _host_instr_snapshot(self) -> Dict[str, Dict[str, Any]]:
+        """Host copy of the instrumentation sketches, taken under the
+        runtime lock so no in-flight step can donate the buffers
+        mid-copy."""
+        import numpy as np
+        with self._lock:
+            return {sid: {k: np.asarray(v) for k, v in st.items()}
+                    for sid, st in self.state.instr.items()}
 
     # ---- control plane -------------------------------------------------
     def control_update(self, name: str, fields, n_valid=None) -> None:
@@ -117,8 +153,10 @@ class MorpheusRuntime:
     def _apply_update(self, name, fields, n_valid):
         self.tables.control_update(name, fields, n_valid)
         # refresh device copy of that table; program guard now deopts
-        self.table_state = dict(self.table_state)
-        self.table_state[name] = self.tables[name].device_arrays()
+        with self._lock:
+            tables = dict(self.state.tables)
+            tables[name] = self.tables[name].device_arrays()
+            self.state = self.state.replace(tables=tables)
 
     def set_feature(self, name: str, value: bool) -> None:
         self.engine.cfg.features[name] = value
@@ -145,7 +183,8 @@ class MorpheusRuntime:
         with self._lock:
             self._compiling = True
         try:
-            plan, t1, pass_stats = self.engine.build_plan(self.instr_state)
+            instr = self._host_instr_snapshot()
+            plan, t1, pass_stats = self.engine.build_plan(instr)
             self.stats.t1_history.append(t1)
             self.stats.pass_stats = pass_stats
             instr_plan = SpecializationPlan(
@@ -155,7 +194,7 @@ class MorpheusRuntime:
             new_instr = self._get_exec(instr_plan, self._example_batch)
 
             # update hot-set stability -> adapt sampling cadence
-            for sid, st in self.instr_state.items():
+            for sid, st in instr.items():
                 from . import instrument
                 hot, cov, _ = instrument.hot_keys(st, self.engine.cfg.sketch)
                 self.controller.observe(sid, hot)
@@ -166,8 +205,9 @@ class MorpheusRuntime:
                 self.plan, self.exec, self.instr_exec = \
                     plan, new_exec, new_instr
                 # reset sketch window + revalidate RW guards for the new code
-                self.instr_state = self.engine.init_instr_state()
-                self.guards = self.engine.init_guards()
+                self.state = self.state.replace(
+                    instr=self.engine.init_instr_state(),
+                    guards=self.engine.init_guards())
                 self._compiling = False
                 queued, self._queued = self._queued, []
             self.stats.swap_history.append(time.time() - t0)
@@ -182,5 +222,5 @@ class MorpheusRuntime:
                 self._compiling = False
 
     # ---- introspection -----------------------------------------------------
-    def hot_experts(self):
-        return (self.plan.flags or {}).get("__moe_hot__")
+    def hot_experts(self) -> Optional[Tuple[int, ...]]:
+        return self.plan.hot_experts(self.engine.cfg.moe_router_table)

@@ -21,7 +21,7 @@ from ..kernels import ops as kops
 @dataclass(frozen=True)
 class SiteSpec:
     impl: str = "gather"       # gather | onehot | hot_cache | inline_const
-                               # | const_row | eliminated
+                               # | const_row | eliminated | moe_fastpath
     hot_keys: Tuple[int, ...] = ()
     guarded: bool = False      # RW site guard (guard elision decides)
     const_fields: Tuple[Tuple[str, Any], ...] = ()   # const-prop per field
@@ -32,7 +32,7 @@ class SiteSpec:
 class SpecializationPlan:
     version: int = -1                                # TableSet version
     sites: Tuple[Tuple[str, SiteSpec], ...] = ()
-    flags: Any = None                                # dict site_id -> bool
+    flags: Any = None                                # dict flag name -> bool
     instrumented: bool = False
     label: str = "generic"
 
@@ -40,6 +40,17 @@ class SpecializationPlan:
         for sid, spec in self.sites:
             if sid == site_id:
                 return spec
+        return None
+
+    def hot_experts(self, table: Optional[str] = None
+                    ) -> Optional[Tuple[int, ...]]:
+        """Hot set the MoE fast-path pass planned for ``table`` (any
+        table when None), or None when no such site was specialized."""
+        for sid, spec in self.sites:
+            if spec.impl != "moe_fastpath":
+                continue
+            if table is None or sid.split("#")[0] == table:
+                return spec.hot_keys or None
         return None
 
     @property
@@ -96,7 +107,9 @@ def dispatch_lookup(plan, site_id: str, name: str, table_state, idx,
                     fields, guards):
     state = table_state[name]
     spec = plan.site(site_id) if plan is not None else None
-    if spec is None or spec.impl == "gather":
+    if spec is None or spec.impl in ("gather", "moe_fastpath"):
+        # moe_fastpath specializes the *caller's* expert dispatch (branch
+        # injection); the router lookup itself stays a plain gather.
         return _gather(state, idx, fields)
 
     if spec.impl == "eliminated":

@@ -1,0 +1,58 @@
+"""PlaneState — the data plane's device state as one registered pytree.
+
+Everything the step function threads through — table contents, the
+instrumentation sketches, and the RW site guards — travels as a single
+:class:`PlaneState` instead of loose dicts.  Because it is a registered
+JAX pytree, the whole state can be
+
+  * donated (``donate_argnums`` on the state argument: the previous
+    step's buffers are reused in place, which is what makes per-step
+    state threading free on accelerators),
+  * sharded per leaf (a PlaneState of ``Sharding`` objects is a valid
+    pytree-prefix for ``jax.jit`` in/out shardings), and
+  * manipulated with ``jax.tree_util`` like any other JAX container.
+
+The three fields:
+
+  tables  table name -> field name -> device array (the match-action maps)
+  instr   site id    -> sketch state (count-min + candidate ring)
+  guards  table name -> (1,) int32, nonzero once the data plane wrote the
+          table (the in-graph RW site guard, §4.3.6)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import jax
+
+Array = Any
+
+
+@dataclass
+class PlaneState:
+    tables: Dict[str, Dict[str, Array]]
+    instr: Dict[str, Dict[str, Array]]
+    guards: Dict[str, Array]
+
+    def replace(self, **kw) -> "PlaneState":
+        return dataclasses.replace(self, **kw)
+
+    def copy(self) -> "PlaneState":
+        """Deep-copy every leaf buffer.  Use before handing the state to a
+        donating executable whose result you do not intend to keep (e.g.
+        replaying the generic executable for a semantics check)."""
+        import jax.numpy as jnp
+        return jax.tree.map(jnp.copy, self)
+
+
+try:
+    jax.tree_util.register_dataclass(
+        PlaneState, data_fields=("tables", "instr", "guards"),
+        meta_fields=())
+except AttributeError:      # older JAX: manual registration
+    jax.tree_util.register_pytree_node(
+        PlaneState,
+        lambda s: ((s.tables, s.instr, s.guards), None),
+        lambda _, c: PlaneState(*c))

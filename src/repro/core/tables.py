@@ -7,21 +7,25 @@ plane": config pushes, adapter uploads, backend changes) or — for RW tables
 — by the step function itself (session/KV state, the `conn_table`
 analogue).
 
-Model/serving code never indexes the arrays directly; it calls
-:func:`lookup` / :func:`update` / :func:`flag`, which
+Model/serving code never indexes the arrays directly; it goes through
+:class:`~repro.core.ctx.DataPlaneCtx` — the single data-plane API —
+whose ``lookup`` / ``update`` / ``flag`` methods
 
   * register the *call site* in the analysis registry while tracing
     (signature-based call-site analysis, §4.1),
-  * dispatch to the implementation chosen by the active
-    SpecializationPlan (gather / one-hot-matmul / VMEM hot-cache /
-    inlined constant / eliminated), and
+  * dispatch to the implementation chosen by the SpecializationPlan the
+    ctx carries (gather / one-hot-matmul / VMEM hot-cache / inlined
+    constant / eliminated), and
   * record instrumentation when the active executable is the
     instrumented variant (§4.2).
+
+This module owns only the host-side descriptors (:class:`Table`,
+:class:`TableSet`) and the trace-time call-site registry.
 """
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -146,66 +150,3 @@ class analyzing:
 def reset_site_counters():
     """Call before each trace so site ids are stable across traces."""
     _CTX.counters = {}
-
-
-# ---------------------------------------------------------------------------
-# Data-plane API: lookup / update / flag
-# ---------------------------------------------------------------------------
-
-# The active specialization plan (installed by the runtime around tracing).
-_ACTIVE_PLAN = threading.local()
-
-
-def get_active_plan():
-    return getattr(_ACTIVE_PLAN, "plan", None)
-
-
-def set_active_plan(plan) -> None:
-    _ACTIVE_PLAN.plan = plan
-
-
-def lookup(table_state: Dict[str, jax.Array], name: str, idx: jax.Array,
-           fields: Optional[Tuple[str, ...]] = None,
-           guards: Optional[Dict[str, jax.Array]] = None
-           ) -> Dict[str, jax.Array]:
-    """Look up rows ``idx`` (int array) in table ``name``.
-
-    Dispatches through the active SpecializationPlan; the generic
-    implementation is a plain gather per field."""
-    from .specialize import dispatch_lookup
-    site_id = _register(name, "lookup", fields or ())
-    plan = get_active_plan()
-    return dispatch_lookup(plan, site_id, name, table_state, idx,
-                           fields, guards)
-
-
-def update(table_state: Dict[str, jax.Array], name: str, idx: jax.Array,
-           values: Dict[str, jax.Array],
-           guards: Optional[Dict[str, jax.Array]] = None):
-    """Data-plane write (RW tables).  Returns (new_table_state, new_guards):
-    the site guard for this table is invalidated in-graph — the paper's
-    ``map_update_elem`` pre-handler."""
-    site_id = _register(name, "update")
-    new_fields = dict(table_state)
-    for k, v in values.items():
-        new_fields[k] = table_state[k].at[idx].set(
-            v.astype(table_state[k].dtype))
-    new_guards = guards
-    if guards is not None and name in guards:
-        new_guards = dict(guards)
-        new_guards[name] = jnp.ones_like(guards[name])  # 1 = invalidated
-    return new_fields, new_guards
-
-
-def flag(name: str, value_if_unplanned: bool = True) -> Any:
-    """Control-plane feature flag consulted at TRACE time.
-
-    When the active plan pins the flag (RO, protected by the program-level
-    guard) this returns a Python bool — the untaken branch never enters the
-    jaxpr (dead-code elimination, §4.3.3).  Unplanned flags return the
-    conservative default."""
-    site_id = _register(name, "flag")
-    plan = get_active_plan()
-    if plan is not None and site_id in plan.flags:
-        return plan.flags[site_id]
-    return value_if_unplanned

@@ -20,6 +20,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..distributed.compat import shard_map
 from .config import MLAConfig, ModelConfig
 from .layers import apply_rope, dot_f32
 from .params import Initializer
@@ -188,14 +189,13 @@ def _gqa_decode_seq_parallel(pol, q, k, v, kv_pos, positions, *,
 
     seq_spec = seq_axes if len(seq_axes) > 1 else seq_axes[0]
     batch_spec = batch if batch else None
-    return jax.shard_map(
+    return shard_map(
         body, mesh=pol.mesh,
         in_specs=(P(batch_spec, None, None, None),
                   P(batch_spec, seq_spec, None, None),
                   P(batch_spec, seq_spec, None, None),
                   P(seq_spec)),
         out_specs=P(batch_spec, None, None, None),
-        check_vma=False,
     )(q, k, v, kv_pos).astype(q.dtype)
 
 
@@ -288,12 +288,11 @@ def _mla_decode_seq_parallel(pol, q_lat, q_rope, ckv, k_rope, kv_pos,
             l_glob, 1e-30).transpose(0, 2, 1)[..., None]
         return out.astype(jnp.float32)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=pol.mesh,
         in_specs=(P(batch, None, None, None), P(batch, None, None, None),
                   P(batch, mdl, None), P(batch, mdl, None), P(mdl)),
         out_specs=P(batch, None, None, None),
-        check_vma=False,
     )(q_lat, q_rope, ckv, k_rope, kv_pos)
 
 

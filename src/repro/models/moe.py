@@ -24,6 +24,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..distributed.compat import shard_map
 from ..distributed.meshctx import get_policy
 from .config import MoEConfig, ModelConfig
 from .layers import ffn, init_ffn
@@ -291,13 +292,12 @@ def moe_ffn_sharded(params, x2d: jax.Array, moe: MoEConfig, act: str = "silu"):
                                    all_axes=all_axes)
 
         tok_spec = P(batch + (mdl,), None)
-        y, aux, dropped, counts = jax.shard_map(
+        y, aux, dropped, counts = shard_map(
             body, mesh=mesh,
             in_specs=(tok_spec, P(None, None), P(None),
                       P(mdl, None, None), P(mdl, None, None),
                       P(mdl, None, None)),
             out_specs=(tok_spec, P(), P(), P()),
-            check_vma=False,
         )(x2d, params["w_router"], params["b_router"],
           params["w1"], params["w3"], params["w2"])
     else:
@@ -308,13 +308,12 @@ def moe_ffn_sharded(params, x2d: jax.Array, moe: MoEConfig, act: str = "silu"):
                                         model_axis=mdl, n_model=n_model,
                                         all_axes=all_axes)
 
-        y, aux, dropped, counts = jax.shard_map(
+        y, aux, dropped, counts = shard_map(
             body, mesh=mesh,
             in_specs=(P(None, None), P(None, None), P(None),
                       P(mdl, None, None), P(mdl, None, None),
                       P(mdl, None, None)),
             out_specs=(P(None, None), P(), P(), P()),
-            check_vma=False,
         )(x2d, params["w_router"], params["b_router"],
           params["w1"], params["w3"], params["w2"])
     return y, {"aux_loss": aux, "dropped": dropped, "expert_counts": counts}

@@ -161,7 +161,7 @@ def make_serve_step(cfg: ServeConfig):
 
         x = ctx.lookup("vocab_embed", tokens, fields=("vec",))["vec"]
 
-        hot = (getattr(ctx.plan, "flags", None) or {}).get("__moe_hot__")
+        hot = ctx.hot_experts("router")
         for lp in params["layers"]:
             x = x + attention(lp, rmsnorm(lp["norm1"], x))
             h = rmsnorm(lp["norm2"], x)

@@ -141,9 +141,7 @@ def test_specialization_preserves_semantics(runtime):
     assert runtime.plan.label.startswith("specialized")
     batch = make_request_batch(cfg, jax.random.PRNGKey(77))
     out_s = runtime.step(batch)
-    out_g, *_ = runtime.generic_exec(runtime.params, runtime.table_state,
-                                     runtime.instr_state, runtime.guards,
-                                     batch)
+    out_g = runtime.run_generic(batch)
     np.testing.assert_allclose(np.asarray(out_s), np.asarray(out_g),
                                rtol=1e-5, atol=1e-5)
 
@@ -185,8 +183,7 @@ def test_dead_code_flag_shrinks_program(runtime):
     plan_on = dataclasses.replace(
         plan_off, flags={**plan_off.flags, "vision_enabled": True})
     batch = make_request_batch(cfg, KEY)
-    args = (runtime.params, runtime.table_state, runtime.instr_state,
-            runtime.guards, batch)
+    args = (runtime.params, runtime.state, batch)
     jx_off = jax.make_jaxpr(eng.make_step_fn(plan_off))(*args)
     jx_on = jax.make_jaxpr(eng.make_step_fn(plan_on))(*args)
     assert len(jx_off.jaxpr.eqns) < len(jx_on.jaxpr.eqns)
@@ -195,7 +192,8 @@ def test_dead_code_flag_shrinks_program(runtime):
 def test_rw_update_invalidates_site_guard(runtime):
     cfg = runtime._serve_cfg
     batch = make_request_batch(cfg, KEY)
-    runtime.guards = runtime.engine.init_guards()
-    assert int(runtime.guards["sessions"][0]) == 0
+    runtime.state = runtime.state.replace(
+        guards=runtime.engine.init_guards())
+    assert int(runtime.state.guards["sessions"][0]) == 0
     runtime.step(batch)                # step writes sessions
-    assert int(runtime.guards["sessions"][0]) == 1
+    assert int(runtime.state.guards["sessions"][0]) == 1

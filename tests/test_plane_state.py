@@ -1,0 +1,206 @@
+"""The redesigned core API: PlaneState pytree, donated compile,
+flag-keying contract, and the pluggable pass registry."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DataPlaneCtx, EngineConfig, MorpheusEngine, \
+    PassRegistry, PlaneState, SiteSpec, SketchConfig, SpecializationPass, \
+    default_registry
+from repro.core.tables import CallSite
+from repro.serving import ServeConfig, build_params, build_tables, \
+    make_request_batch, make_serve_step
+
+KEY = jax.random.PRNGKey(0)
+SK = SketchConfig(sample_every=2, max_hot=4, hot_coverage=0.5)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = ServeConfig()
+    params = build_params(cfg, KEY)
+    tables = build_tables(cfg, KEY)
+    eng = MorpheusEngine(
+        make_serve_step(cfg), tables,
+        EngineConfig(sketch=SK,
+                     features={"vision_enabled": False,
+                               "track_sessions": True},
+                     moe_router_table="router"))
+    batch = make_request_batch(cfg, KEY)
+    eng.analyze(params, batch)
+    return cfg, eng, params, batch
+
+
+# ---------------------------------------------------------------------------
+# PlaneState pytree
+# ---------------------------------------------------------------------------
+
+def test_plane_state_tree_roundtrip(engine):
+    _, eng, _, _ = engine
+    state = eng.init_state()
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    assert len(leaves) > 0
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(rebuilt, PlaneState)
+    assert set(rebuilt.tables) == set(state.tables)
+    assert set(rebuilt.instr) == set(state.instr)
+    assert set(rebuilt.guards) == set(state.guards)
+    for a, b in zip(leaves, jax.tree_util.tree_leaves(rebuilt)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_plane_state_tree_map_and_replace(engine):
+    _, eng, _, _ = engine
+    state = eng.init_state()
+    doubled = jax.tree.map(lambda x: x * 2, state)
+    assert isinstance(doubled, PlaneState)
+    np.testing.assert_array_equal(
+        np.asarray(doubled.tables["req_class"]["temperature"]),
+        2 * np.asarray(state.tables["req_class"]["temperature"]))
+    swapped = state.replace(guards={})
+    assert swapped.guards == {} and swapped.tables is state.tables
+
+
+def test_donation_does_not_change_results(engine):
+    cfg, eng, params, batch = engine
+    plan = eng.generic_plan()
+    exe_d, _ = eng.compile(plan, params, eng.init_state(), batch,
+                           donate=True)
+    exe_p, _ = eng.compile(plan, params, eng.init_state(), batch,
+                           donate=False)
+    out_d, st_d = exe_d(params, eng.init_state(), batch)
+    out_p, st_p = exe_p(params, eng.init_state(), batch)
+    np.testing.assert_allclose(np.asarray(out_d), np.asarray(out_p),
+                               rtol=1e-6, atol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(st_d),
+                    jax.tree_util.tree_leaves(st_p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_compile_accepts_per_leaf_shardings(engine):
+    cfg, eng, params, batch = engine
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    rep = jax.sharding.NamedSharding(mesh,
+                                     jax.sharding.PartitionSpec())
+    exe, _ = eng.compile(eng.generic_plan(), params, eng.init_state(),
+                         batch, in_shardings=rep, out_shardings=rep)
+    out, st = exe(params, eng.init_state(), batch)
+    assert isinstance(st, PlaneState)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+# ---------------------------------------------------------------------------
+# flag keying contract
+# ---------------------------------------------------------------------------
+
+def test_ctx_flag_and_plan_flags_agree_on_keying(engine):
+    """Regression: plan flags are keyed by flag NAME (what ctx.flag looks
+    up), never by the flag call site's id."""
+    _, eng, _, _ = engine
+    plan, _, _ = eng.build_plan({})
+    assert plan.flags["vision_enabled"] is False
+    assert plan.flags["track_sessions"] is True
+    flag_sites = [s.site_id for s in eng.sites if s.kind == "flag"]
+    assert flag_sites, "serve step registers flag sites"
+    assert not any(sid in plan.flags for sid in flag_sites)
+
+    ctx = DataPlaneCtx(plan, eng.init_state(), eng.cfg.sketch)
+    assert ctx.flag("vision_enabled", default=True) is False
+    assert ctx.flag("unplanned_flag", default=True) is True
+
+
+# ---------------------------------------------------------------------------
+# pass registry
+# ---------------------------------------------------------------------------
+
+def test_default_registry_order_and_lookup():
+    reg = default_registry("router")
+    names = reg.names()
+    assert names.index("eliminated") < names.index("inlined") \
+        < names.index("const_row") < names.index("moe_fastpath") \
+        < names.index("fastpath") < names.index("onehot")
+    assert names[-1] == "guard_elision"
+    assert reg.get("moe_fastpath").router_table == "router"
+
+
+def test_registry_register_before_after_remove():
+    reg = default_registry(None)
+    class NopPass(SpecializationPass):
+        name = "nop"
+    reg.register(NopPass(), before="fastpath")
+    names = reg.names()
+    assert names.index("nop") == names.index("fastpath") - 1
+    reg.remove("nop")
+    assert "nop" not in reg.names()
+    reg.register(NopPass(), after="eliminated")
+    assert reg.names().index("nop") == reg.names().index("eliminated") + 1
+    with pytest.raises(ValueError):
+        reg.register(NopPass())          # duplicate name
+
+    class OtherPass(SpecializationPass):
+        name = "other"
+    before = reg.names()
+    with pytest.raises(KeyError):
+        reg.register(OtherPass(), before="does_not_exist")
+    # failed register must leave the pipeline unchanged
+    assert reg.names() == before
+
+
+def test_custom_pass_claims_site_first(engine):
+    """A user-registered pass ahead of the pipeline overrides the
+    engine's decision for the sites it matches."""
+    cfg_s = ServeConfig()
+    params = build_params(cfg_s, KEY)
+    tables = build_tables(cfg_s, KEY)
+
+    class PinGather(SpecializationPass):
+        name = "pin_gather"
+        def match(self, site):
+            return site.kind == "lookup" and site.table == "req_class"
+        def plan(self, site, snapshot, stats):
+            return SiteSpec(impl="gather")
+
+    reg = default_registry("router")
+    reg.register(PinGather(), before="eliminated")
+    eng = MorpheusEngine(
+        make_serve_step(cfg_s), tables,
+        EngineConfig(sketch=SK, passes=reg, moe_router_table="router"))
+    batch = make_request_batch(cfg_s, KEY)
+    eng.analyze(params, batch)
+    plan, _, stats = eng.build_plan({})
+    assert stats["pin_gather"] >= 1
+    impls = {sid.split("#")[0]: s.impl for sid, s in plan.sites}
+    assert impls["req_class"] == "gather"     # not const_row/inline
+
+
+def test_moe_pass_emits_site_spec_not_flag(engine):
+    """The MoE hot path is a registered pass producing a moe_fastpath
+    SiteSpec on the router site — no __moe_hot__ side-channel."""
+    cfg_s = ServeConfig()
+    params = build_params(cfg_s, KEY)
+    for lp in params["layers"]:
+        bias = np.zeros(cfg_s.n_experts, np.float32)
+        bias[:3] = 6.0
+        lp["moe"]["b_router"] = jnp.asarray(bias)
+    from repro.core import MorpheusRuntime
+    rt = MorpheusRuntime(
+        make_serve_step(cfg_s), build_tables(cfg_s, KEY), params,
+        make_request_batch(cfg_s, KEY),
+        cfg=EngineConfig(sketch=SK,
+                         features={"vision_enabled": False,
+                                   "track_sessions": True},
+                         moe_router_table="router"))
+    for i in range(8):
+        rt.step(make_request_batch(cfg_s, jax.random.PRNGKey(i), 8,
+                                   "high"))
+    rt.recompile(block=True)
+    hot = rt.hot_experts()
+    assert hot is not None and len(hot) >= 1
+    assert rt.plan.hot_experts("router") == hot
+    assert "__moe_hot__" not in (rt.plan.flags or {})
+    impls = {sid: s.impl for sid, s in rt.plan.sites}
+    assert any(sid.startswith("router#") and impl == "moe_fastpath"
+               for sid, impl in impls.items())

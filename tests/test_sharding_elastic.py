@@ -189,6 +189,7 @@ def test_hlo_analyzer_counts_collectives():
     r = _run("""
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
+    from repro.distributed.compat import shard_map
     from repro.launch.mesh import make_debug_mesh
     from repro.launch import hlo_analysis as H
 
@@ -196,8 +197,8 @@ def test_hlo_analyzer_counts_collectives():
     def f(x):
         def body(xl):
             return jax.lax.psum(xl, "data")
-        return jax.shard_map(body, mesh=mesh, in_specs=P("data", None),
-                             out_specs=P(None, None), check_vma=False)(x)
+        return shard_map(body, mesh=mesh, in_specs=P("data", None),
+                         out_specs=P(None, None))(x)
     x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
     with mesh:
         txt = jax.jit(f).lower(x).compile().as_text()

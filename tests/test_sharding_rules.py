@@ -3,12 +3,13 @@ devices needed — Mesh is built abstractly)."""
 import jax
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.distributed.compat import abstract_mesh
 from repro.distributed.sharding import make_rules, spec_for
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = abstract_mesh((16, 16), ("data", "model"))
+MESH3 = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 RULES = make_rules(False, fsdp=True)
 RULES3 = make_rules(True, fsdp=True)
 

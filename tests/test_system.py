@@ -70,8 +70,7 @@ def test_specialization_is_semantics_preserving(system):
     rt.recompile(block=True)
     b = make_request_batch(cfg, jax.random.PRNGKey(4242), 8, "high")
     out_s = rt.step(b)
-    out_g, *_ = rt.generic_exec(rt.params, rt.table_state, rt.instr_state,
-                                rt.guards, b)
+    out_g = rt.run_generic(b)
     np.testing.assert_allclose(np.asarray(out_s), np.asarray(out_g),
                                rtol=1e-4, atol=1e-4)
 
