@@ -1,0 +1,78 @@
+"""Sharded serving runtime — scale-out and control-plane isolation.
+
+Two claims of the sharded runtime, measured:
+
+  * **snapshot handoff**: the t1 table snapshot is taken off-thread with
+    versioned copy-on-write handoff — the recompile path's wait for a
+    snapshot should be microseconds (the worker keeps it fresh), vs the
+    seed behavior of deep-copying every table inline (O(bytes), and it
+    blocked control-plane writers);
+  * **sharded vs single-device serve**: same traffic, same plan, with
+    the sketches device-local and psum-merged only at plan time.  On a
+    forced multi-device CPU host (XLA_FLAGS=
+    --xla_force_host_platform_device_count=4) shard_map overhead
+    dominates at toy sizes — the point of the row is plan parity and a
+    tracked number, not a CPU speedup.
+
+Run standalone:  PYTHONPATH=src python -m benchmarks.bench_sharded_serve
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import TableSnapshotWorker
+from repro.launch.serve import run_serve
+from repro.serving import ServeConfig, build_tables
+
+
+def _snapshot_rows() -> list:
+    rows = []
+    tables = build_tables(ServeConfig(), jax.random.PRNGKey(0))
+
+    # seed behavior: inline deep copy on the caller's thread
+    t0 = time.time()
+    for _ in range(20):
+        tables.snapshot()
+    inline_us = (time.time() - t0) / 20 * 1e6
+
+    # off-thread versioned handoff (worker keeps the snapshot fresh)
+    w = TableSnapshotWorker(tables)
+    w.get(tables.version)                     # warm: worker has published
+    t0 = time.time()
+    for _ in range(20):
+        w.get(tables.version)
+    handoff_us = (time.time() - t0) / 20 * 1e6
+    w.stop()
+    rows.append(("sharded/t1_snapshot_inline", inline_us, "seed_path"))
+    rows.append(("sharded/t1_snapshot_handoff", handoff_us,
+                 f"speedup={inline_us / max(handoff_us, 1e-9):.1f}x"))
+    return rows
+
+
+def run(steps: int = 40) -> list:
+    rows = _snapshot_rows()
+
+    stats1, rt1 = run_serve(steps=steps, recompile_every=steps // 2,
+                            quiet=True, mesh="none")
+    rows.append(("sharded/serve_1dev", 1e6 / stats1["req_per_s"],
+                 f"p50_ms={stats1['p50_ms']:.1f}"))
+    rt1.close()
+
+    if jax.device_count() > 1:
+        statsN, rtN = run_serve(steps=steps, recompile_every=steps // 2,
+                                quiet=True, mesh="auto")
+        parity = (rtN.plan.sites == rt1.plan.sites)
+        rows.append((f"sharded/serve_{statsN['n_devices']}dev",
+                     1e6 / statsN["req_per_s"],
+                     f"p50_ms={statsN['p50_ms']:.1f};"
+                     f"plan_parity={parity}"))
+        rtN.close()
+    return rows
+
+
+if __name__ == "__main__":
+    from ._util import emit
+    emit(run())

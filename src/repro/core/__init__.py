@@ -4,6 +4,7 @@ from .engine import EngineConfig, MorpheusEngine
 from .instrument import AdaptiveController, SketchConfig
 from .passes import PassRegistry, SpecializationPass, default_registry
 from .runtime import MorpheusRuntime, RuntimeStats
+from .snapshot import TableSnapshotWorker, VersionedSnapshot
 from .specialize import GENERIC_PLAN, SiteSpec, SpecializationPlan
 from .state import PlaneState
 from .tables import Table, TableSet

@@ -17,6 +17,13 @@ in when this trace is the instrumented variant.
 Flags and plan flags are keyed by flag *name* (not by site id): the same
 feature consulted at two call sites is one control-plane fact and pins
 both branches together.
+
+On a device mesh (``EngineConfig.mesh``) the ctx records instrumentation
+*per device*: each sketch leaf carries a leading shard axis and the
+record runs under ``shard_map`` so every device folds only its local
+shard of the looked-up keys into its own sketch slice — zero cross-device
+traffic on the serving path.  The engine merges the slices into one
+global traffic snapshot at plan time.
 """
 from __future__ import annotations
 
@@ -31,44 +38,79 @@ from .state import PlaneState
 
 
 class DataPlaneCtx:
+    """Dispatch context threaded through one trace of the step function.
+
+    Built by :meth:`MorpheusEngine.make_step_fn` from the incoming
+    :class:`PlaneState`; mutated in place by ``lookup``/``update`` while
+    tracing; read back as the step's output state via :meth:`outputs`.
+
+    ``mesh``/``instr_axes`` (from ``EngineConfig``) select the sharded
+    instrumentation path; with ``mesh=None`` recording is the classic
+    single-sketch update.
+    """
+
     def __init__(self, plan, state: PlaneState,
-                 sketch_cfg: instrument.SketchConfig):
+                 sketch_cfg: instrument.SketchConfig,
+                 mesh=None, instr_axes: Tuple[str, ...] = ("data",)):
         self.plan = plan
         self.tables = dict(state.tables)
         self.instr = dict(state.instr)
         self.guards = dict(state.guards)
         self.sketch_cfg = sketch_cfg
+        self.mesh = mesh
+        self.instr_axes = instr_axes
+
+    # ---- instrumentation ----------------------------------------------------
+    def _record(self, site_id: str, idx: jax.Array) -> None:
+        """Fold this lookup's keys into the site's sketch — per device
+        (``shard_map``) when the sketch is sharded, else globally."""
+        st = self.instr[site_id]
+        if self.mesh is not None and instrument.n_shards(st) is not None:
+            self.instr[site_id] = instrument.record_sharded(
+                st, idx, self.sketch_cfg, self.mesh, self.instr_axes)
+        else:
+            self.instr[site_id] = instrument.record(st, idx,
+                                                    self.sketch_cfg)
 
     # ---- data-plane API ---------------------------------------------------
     def lookup(self, name: str, idx: jax.Array,
                fields: Optional[Tuple[str, ...]] = None):
+        """Read rows ``idx`` of table ``name`` (all fields, or just
+        ``fields``), returning ``{field: array}`` with the table's row
+        shape appended to ``idx``'s shape.  Dispatches through the plan's
+        SiteSpec for this call site (gather / one-hot / hot-row cache /
+        inlined constants / ...) and records instrumentation when this
+        trace is the instrumented executable."""
         site_id = T._register(name, "lookup", fields or ())
         if (self.plan is not None and self.plan.instrumented
                 and site_id in self.instr):
-            self.instr[site_id] = instrument.record(
-                self.instr[site_id], idx, self.sketch_cfg)
+            self._record(site_id, idx)
         return dispatch_lookup(self.plan, site_id, name, self.tables,
                                idx, fields, self.guards)
 
     def lookup_or_none(self, name: str, idx: jax.Array,
                        fields: Optional[Tuple[str, ...]] = None):
-        """Like lookup, but when the plan marks this site ELIMINATED
-        (empty table, §4.3.1) returns None at trace time — the caller's
-        whole branch drops out of the jaxpr, exactly like the paper
-        removing the lookup call from the datapath."""
+        """Like :meth:`lookup`, but when the plan marks this site
+        ELIMINATED (empty table, §4.3.1) returns None at trace time — the
+        caller's whole branch drops out of the jaxpr, exactly like the
+        paper removing the lookup call from the datapath."""
         site_id = T._register(name, "lookup", fields or ())
         spec = self.plan.site(site_id) if self.plan is not None else None
         if spec is not None and spec.impl == "eliminated":
             return None
         if (self.plan is not None and self.plan.instrumented
                 and site_id in self.instr):
-            self.instr[site_id] = instrument.record(
-                self.instr[site_id], idx, self.sketch_cfg)
+            self._record(site_id, idx)
         return dispatch_lookup(self.plan, site_id, name, self.tables,
                                idx, fields, self.guards)
 
     def update(self, name: str, idx: jax.Array,
                values: Dict[str, jax.Array]) -> None:
+        """Data-plane write: scatter ``values`` into rows ``idx`` of the
+        RW table ``name``.  The new contents travel in the step's output
+        :class:`PlaneState`; the table's in-graph guard is invalidated in
+        the same step (§4.3.6), deoptimizing any specialization that
+        assumed the old contents."""
         T._register(name, "update")
         state = dict(self.tables[name])
         for k, v in values.items():
@@ -79,6 +121,10 @@ class DataPlaneCtx:
             self.guards[name] = jnp.ones_like(self.guards[name])
 
     def flag(self, name: str, default: bool = True):
+        """Read feature flag ``name`` as a trace-time Python bool.  When
+        the plan pins the flag (dead-code pass), the pinned value is
+        returned and the untaken branch never enters the jaxpr; on the
+        generic plan the ``default`` is used."""
         T._register(name, "flag")
         plan_flags = getattr(self.plan, "flags", None) or {}
         if name in plan_flags:
@@ -95,4 +141,6 @@ class DataPlaneCtx:
         return self.plan.hot_experts(table)
 
     def outputs(self) -> PlaneState:
+        """The step's output :class:`PlaneState`: tables (with any
+        data-plane writes), updated sketches, and guards."""
         return PlaneState(self.tables, self.instr, self.guards)

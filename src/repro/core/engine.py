@@ -36,11 +36,32 @@ from .tables import TableSet, analysis_sites, analyzing, \
 
 @dataclass
 class EngineConfig:
+    """Static configuration of one :class:`MorpheusEngine`.
+
+    ``mesh`` switches the engine into sharded-serving mode: tables and
+    guards are replicated over the mesh, instrumentation sketches carry
+    one slice per device along ``instr_axes`` (updated locally under
+    ``shard_map``), and ``compile`` derives default per-leaf
+    ``in_shardings``/``out_shardings`` for the whole
+    ``(params, state, batch)`` signature.  ``mesh=None`` (the default)
+    is the classic single-device engine."""
     sketch: SketchConfig = field(default_factory=SketchConfig)
     features: Dict[str, bool] = field(default_factory=dict)
     moe_router_table: Optional[str] = None   # table backing MoE routing
     passes: Optional[PassRegistry] = None    # None => default_registry
     donate: bool = True                      # donate PlaneState buffers
+    mesh: Optional[Any] = None               # jax Mesh => sharded serving
+    instr_axes: Tuple[str, ...] = ("data",)  # sketch/batch mesh axes
+
+    @property
+    def n_instr_shards(self) -> Optional[int]:
+        """Per-site sketch count in sharded mode (None when unsharded)."""
+        if self.mesh is None:
+            return None
+        n = 1
+        for a in self.instr_axes:
+            n *= self.mesh.shape[a]
+        return n
 
 
 class MorpheusEngine:
@@ -59,6 +80,11 @@ class MorpheusEngine:
 
     # ---- §4.1 static code analysis ---------------------------------------
     def analyze(self, params, example_batch) -> Dict[str, Any]:
+        """Offline static analysis (run once before anything else):
+        abstractly trace ``user_step`` to register every table call site,
+        then classify tables RO/RW (any in-plane ``ctx.update`` makes a
+        table RW; an explicit ``Table.mutability`` annotation wins).
+        Returns ``{"n_sites", "mutability", "analyze_s"}``."""
         t0 = time.time()
         state = PlaneState(self.tables.device_state(), {}, {})
 
@@ -87,6 +113,8 @@ class MorpheusEngine:
 
     # ---- state plumbing ----------------------------------------------------
     def instrumented_sites(self):
+        """Lookup sites that get a sketch: instrumentation is on for the
+        table and the table is too big to inline (§4.2 dim 1)."""
         out = []
         for s in self.sites:
             if s.kind != "lookup":
@@ -97,10 +125,15 @@ class MorpheusEngine:
         return out
 
     def init_instr_state(self):
-        return {sid: instrument.init_site_state(self.cfg.sketch)
+        """Fresh sketch state per instrumented site — sharded (one slice
+        per device along ``cfg.instr_axes``) when the engine has a mesh."""
+        n = self.cfg.n_instr_shards
+        return {sid: instrument.init_site_state(self.cfg.sketch, n)
                 for sid in self.instrumented_sites()}
 
     def init_guards(self):
+        """Zeroed in-graph guards, one per RW table (§4.3.6): nonzero
+        once the data plane writes the table."""
         import jax.numpy as jnp
         return {name: jnp.zeros((1,), jnp.int32)
                 for name, mut in self.mutability.items() if mut == "rw"}
@@ -112,13 +145,43 @@ class MorpheusEngine:
                           self.init_instr_state(), self.init_guards())
 
     # ---- §4.2 + §4.3: read instrumentation, run the registry ---------------
-    def build_plan(self, instr_state, instrumented: bool = False
+    def build_plan(self, instr_state, instrumented: bool = False,
+                   snapshot=None, version: Optional[int] = None
                    ) -> Tuple[SpecializationPlan, float, Dict]:
+        """Plan a specialized executable: read the (already merged,
+        host-side) instrumentation sketches, snapshot the tables, and
+        walk every analyzed call site through the pass registry.
+
+        ``instr_state`` maps site id -> *unsharded* sketch state (the
+        runtime merges per-device sketches before calling; sharded
+        layouts are merged here as a fallback).  ``snapshot``/``version``
+        inject a pre-taken table snapshot — the off-thread snapshot
+        worker's versioned handoff — and must be passed *together*: the
+        plan is stamped with the snapshot's version, so a control-plane
+        update racing past the snapshot deopts the plan via the
+        program-level guard rather than corrupting it.  (Stamping a
+        stale snapshot with the live version would defeat that guard,
+        hence the ValueError.)
+
+        Returns ``(plan, t1_seconds, pass_stats)``."""
         assert self._analyzed
         t0 = time.time()
-        snapshot = self.tables.snapshot()
+        if snapshot is None:
+            # read the version BEFORE copying: an update racing in
+            # between then makes the plan look stale (spurious deopt,
+            # safe) instead of fresher than its contents (unsafe)
+            if version is None:
+                version = self.tables.version
+            snapshot = self.tables.snapshot()
+        elif version is None:
+            raise ValueError(
+                "build_plan(snapshot=...) needs the snapshot's version= "
+                "— stamping an injected snapshot with the live TableSet "
+                "version would disable the deopt guard")
         hot_stats = {}
         for sid, st in (instr_state or {}).items():
+            if instrument.n_shards(st) is not None:
+                st = instrument.merge_shards(st)
             hot, cov, total = instrument.hot_keys(st, self.cfg.sketch)
             hot_stats[sid] = (hot, cov)
 
@@ -130,7 +193,7 @@ class MorpheusEngine:
                  if spec is not None}
 
         plan = SpecializationPlan(
-            version=self.tables.version,
+            version=version,
             sites=tuple(sorted(specs.items())),
             flags=dict(draft.flags),
             instrumented=instrumented,
@@ -139,6 +202,9 @@ class MorpheusEngine:
         return plan, time.time() - t0, dict(draft.stats)
 
     def generic_plan(self, instrumented: bool = False) -> SpecializationPlan:
+        """The unspecialized plan (every site generic, no flags pinned)
+        at the TableSet's current version — the deopt target and the
+        reference-semantics oracle."""
         return SpecializationPlan(
             version=self.tables.version, sites=(),
             flags={}, instrumented=instrumented,
@@ -146,27 +212,63 @@ class MorpheusEngine:
 
     # ---- step-function construction + compile ------------------------------
     def make_step_fn(self, plan: SpecializationPlan) -> Callable:
+        """Wrap ``user_step(params, ctx, batch)`` into the engine's
+        ``step(params, state, batch) -> (out, state)`` contract: build a
+        :class:`DataPlaneCtx` carrying ``plan`` (trace-time constants)
+        and the incoming state, run the user code, and return the ctx's
+        updated :class:`PlaneState` alongside the user output."""
         def step(params, state: PlaneState, batch):
             reset_site_counters()
-            ctx = DataPlaneCtx(plan, state, self.cfg.sketch)
+            ctx = DataPlaneCtx(plan, state, self.cfg.sketch,
+                               mesh=self.cfg.mesh,
+                               instr_axes=self.cfg.instr_axes)
             out = self.user_step(params, ctx, batch)
             return out, ctx.outputs()
         return step
+
+    def default_shardings(self, state: PlaneState, batch):
+        """The sharded-serving placement for ``(params, state, batch)``:
+        params replicated, ``state`` via
+        :func:`repro.distributed.sharding.plane_state_shardings` (tables
+        replicated, sketches device-local), batch sharded on its leading
+        dim.  Returns ``(in_shardings, out_shardings)`` prefix pytrees
+        for :meth:`compile`, or ``(None, None)`` without a mesh."""
+        if self.cfg.mesh is None:
+            return None, None
+        from jax.sharding import NamedSharding, PartitionSpec
+        from ..distributed.sharding import plane_batch_shardings, \
+            plane_state_shardings
+        mesh, axes = self.cfg.mesh, self.cfg.instr_axes
+        state_sh = plane_state_shardings(state, mesh, axes)
+        batch_sh = plane_batch_shardings(batch, mesh, axes)
+        params_sh = NamedSharding(mesh, PartitionSpec())
+        # out sharding: user output left to propagation (None), state
+        # pinned to its input placement so donation can reuse buffers.
+        return (params_sh, state_sh, batch_sh), (None, state_sh)
 
     def compile(self, plan: SpecializationPlan, params, state: PlaneState,
                 batch, *, donate: Optional[bool] = None,
                 in_shardings=None, out_shardings=None
                 ) -> Tuple[Callable, float]:
-        """AOT compile; returns (callable executable, t2 seconds).
+        """AOT-compile ``plan`` into an executable; returns
+        ``(executable, t2_seconds)`` where the executable is called as
+        ``out, new_state = executable(params, state, batch)``.
 
-        The PlaneState argument is donated by default (cfg.donate): the
-        executable may write the new state into the old state's buffers.
+        The PlaneState argument is donated by default (``cfg.donate``):
+        the executable may write the new state into the old state's
+        buffers, so treat the passed-in state as consumed.
         ``in_shardings``/``out_shardings`` pass through to ``jax.jit``
         (prefix pytrees over ``(params, state, batch)`` / the
-        ``(out, state)`` result) for per-leaf placement."""
+        ``(out, state)`` result) for per-leaf placement; when the engine
+        has a mesh and neither is given, :meth:`default_shardings`
+        supplies the sharded-serving placement."""
         t0 = time.time()
         step = self.make_step_fn(plan)
         donate = self.cfg.donate if donate is None else donate
+        if (self.cfg.mesh is not None and in_shardings is None
+                and out_shardings is None):
+            in_shardings, out_shardings = self.default_shardings(state,
+                                                                 batch)
         kw: Dict[str, Any] = {}
         if donate:
             kw["donate_argnums"] = (1,)

@@ -23,7 +23,7 @@ Adaptation dimensions from the paper:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,13 +44,33 @@ _PRIMES = np.array([1000003, 999983, 999979, 999961, 998244353,
                     1000000007, 1000000021, 1000000033], np.int64)
 
 
-def init_site_state(cfg: SketchConfig) -> Dict[str, jax.Array]:
-    return {
+def init_site_state(cfg: SketchConfig,
+                    n_shards: Optional[int] = None) -> Dict[str, jax.Array]:
+    """Fresh sketch state for one call site.
+
+    With ``n_shards=None`` (single-device) the leaves are the classic
+    shapes (``cms (rows, width)``, ``cand (candidates,)``, scalar
+    ``ptr``/``total``).  With ``n_shards=k`` every leaf gains a leading
+    shard axis of size ``k`` — one independent sketch per device, to be
+    sharded over a mesh axis and updated locally via
+    :func:`record_sharded`."""
+    st = {
         "cms": jnp.zeros((cfg.rows, cfg.width), jnp.int32),
         "cand": jnp.full((cfg.candidates,), -1, jnp.int32),
         "ptr": jnp.zeros((), jnp.int32),
         "total": jnp.zeros((), jnp.int32),
     }
+    if n_shards is None:
+        return st
+    return {k: jnp.broadcast_to(v[None], (n_shards,) + v.shape)
+            for k, v in st.items()}
+
+
+def n_shards(state: Dict[str, jax.Array]) -> Optional[int]:
+    """Number of per-device shards of a sketch state, or None when the
+    state is the single-device (unsharded) layout."""
+    cms = state["cms"]
+    return int(cms.shape[0]) if cms.ndim == 3 else None
 
 
 def _hash(keys: jax.Array, row: int, width: int) -> jax.Array:
@@ -101,6 +121,92 @@ def merge(states: List[Dict[str, jax.Array]]) -> Dict[str, jax.Array]:
         out["total"] = out["total"] + s["total"]
         out["cand"] = jnp.concatenate([out["cand"], s["cand"]])
     return out
+
+
+# ---------------------------------------------------------------------------
+# Sharded sketches (§4.2 dims 3+4 on a device mesh)
+# ---------------------------------------------------------------------------
+
+def record_sharded(state: Dict[str, jax.Array], keys: jax.Array,
+                   cfg: SketchConfig, mesh,
+                   axes: Sequence[str] = ("data",)) -> Dict[str, jax.Array]:
+    """Per-device :func:`record` under ``shard_map``: each device folds
+    its local shard of ``keys`` into its own sketch slice — no
+    cross-device traffic on the hot path.
+
+    ``state`` must be the sharded layout (leading shard axis, one slice
+    per device along ``axes``).  ``keys`` is flattened and padded with
+    ``-1`` (ignored by :func:`record`) up to a multiple of the shard
+    count, so any batch shape divides cleanly."""
+    from ..distributed.compat import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    n = n_shards(state)
+    assert n is not None, "record_sharded needs a sharded sketch state"
+    keys = keys.reshape(-1).astype(jnp.int32)
+    pad = (-keys.shape[0]) % n
+    if pad:
+        keys = jnp.concatenate([keys, jnp.full((pad,), -1, jnp.int32)])
+
+    def body(st_local, keys_local):
+        st = {k: v[0] for k, v in st_local.items()}
+        st = record(st, keys_local, cfg)
+        return {k: v[None] for k, v in st.items()}
+
+    spec = P(tuple(axes))
+    return shard_map(body, mesh=mesh, in_specs=(spec, spec),
+                     out_specs=spec)(state, keys)
+
+
+def merge_shards(state: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """Host-side merge of a sharded sketch into one global sketch:
+    count-min rows and totals add (the sketch is linear in its input, so
+    the merged *counts* equal a single global sketch exactly), candidate
+    rings concatenate.  The rings are retention state, not counters: n
+    per-device rings retain the last ``candidates`` keys *each*, so
+    after wrapping, the merged candidate set can differ from what one
+    global ring would have kept — the heavy-hitter readout matches
+    single-device recording whenever the rings still retain the hot keys
+    (hot keys recur, so in practice they do)."""
+    cms = np.asarray(state["cms"])
+    if cms.ndim != 3:
+        return {k: np.asarray(v) for k, v in state.items()}
+    return {
+        "cms": cms.sum(axis=0, dtype=cms.dtype),
+        "cand": np.asarray(state["cand"]).reshape(-1),
+        "ptr": np.zeros((), np.int32),
+        "total": np.asarray(state["total"]).sum(dtype=np.int32),
+    }
+
+
+def merge_on_device(state: Dict[str, jax.Array], mesh,
+                    axes: Sequence[str] = ("data",)) -> Dict[str, jax.Array]:
+    """Device-side global merge (plan time): ``psum`` the count-min rows
+    and totals across the mesh, ``all_gather`` the candidate rings.
+    Returns the *unsharded* global sketch layout, replicated on every
+    device — one collective per site instead of a host gather of every
+    per-device sketch."""
+    from ..distributed.compat import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    assert n_shards(state) is not None
+
+    def body(st_local):
+        cms = st_local["cms"][0]
+        total = st_local["total"][0]
+        cand = st_local["cand"][0]
+        for ax in axes:
+            cms = jax.lax.psum(cms, ax)
+            total = jax.lax.psum(total, ax)
+            cand = jax.lax.all_gather(cand, ax).reshape(-1)
+        return {"cms": cms, "cand": cand,
+                "ptr": jnp.zeros((), jnp.int32), "total": total}
+
+    spec = P(tuple(axes))
+    rep = P()
+    return shard_map(body, mesh=mesh, in_specs=spec,
+                     out_specs={"cms": rep, "cand": rep,
+                                "ptr": rep, "total": rep})(state)
 
 
 def hot_keys(state: Dict[str, jax.Array], cfg: SketchConfig

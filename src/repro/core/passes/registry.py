@@ -44,9 +44,14 @@ class PlanInputs:
     features: Mapping[str, bool]
 
     def mut(self, table: str) -> str:
+        """RO/RW classification of ``table`` ("rw" when unknown — the
+        conservative default forbids unguarded specialization)."""
         return self.mutability.get(table, "rw")
 
     def hot_for(self, site_id: str) -> Tuple[np.ndarray, float]:
+        """Heavy-hitter readout for one call site: ``(hot_keys,
+        coverage)``, already merged across devices on a mesh.  Empty
+        keys / zero coverage when the site was not instrumented."""
         return self.hot_stats.get(site_id, (np.array([], np.int32), 0.0))
 
 

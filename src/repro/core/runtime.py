@@ -23,18 +23,38 @@ background recompile never observe (or replace) a half-donated state.
 For semantics checks use :meth:`run_generic`, a non-donating twin of the
 generic executable; when replaying a *donating* executable by hand, pass
 it ``state.copy()``.
+
+Sharded serving (``EngineConfig.mesh``): the same runtime spans a device
+mesh.  Tables and guards are replicated; each device keeps its own
+instrumentation sketch slice, updated locally inside the jitted step
+(``shard_map``); at plan time the slices are psum-merged on device into
+one global traffic snapshot, which the pass registry consumes unchanged —
+the per-core eBPF pipelines of the paper mapped onto a JAX mesh.  On a
+1-device host pass ``mesh=None`` (or use
+``repro.distributed.meshctx.data_plane_mesh()``, which returns None
+there) and every mesh code path degrades to the classic behavior.
+
+``t1`` table snapshots run on a dedicated
+:class:`~repro.core.snapshot.TableSnapshotWorker` thread with versioned
+copy-on-write handoff — control-plane updates never wait behind a
+snapshot, and a blocking ``recompile`` no longer charges the copy to its
+caller's thread.
 """
 from __future__ import annotations
 
 import threading
 import time
+import weakref
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
+import numpy as np
 
 from .engine import EngineConfig, MorpheusEngine
 from .instrument import AdaptiveController
+from . import instrument
+from .snapshot import TableSnapshotWorker, VersionedSnapshot
 from .specialize import SpecializationPlan
 from .state import PlaneState
 from .tables import TableSet
@@ -42,6 +62,7 @@ from .tables import TableSet
 
 @dataclass
 class RuntimeStats:
+    """Counters and timing histories of one runtime (all host-side)."""
     steps: int = 0
     deopt_steps: int = 0          # routed to generic by the program guard
     instr_steps: int = 0
@@ -52,29 +73,53 @@ class RuntimeStats:
     t2_history: List[float] = field(default_factory=list)
     swap_history: List[float] = field(default_factory=list)
     pass_stats: Dict[str, int] = field(default_factory=dict)
+    snapshot_versions: List[int] = field(default_factory=list)
 
 
 class MorpheusRuntime:
+    """Serve one data plane under dynamic recompilation.
+
+    Call :meth:`step` with request batches (the data plane),
+    :meth:`control_update` / :meth:`set_feature` from the control plane,
+    and :meth:`recompile` to run one Morpheus cycle.  The engine's
+    contract for every executable is
+    ``step(params, state, batch) -> (out, state)`` with the state
+    argument donated.
+
+    Parameters: ``user_step(params, ctx, batch)`` written against
+    :class:`~repro.core.ctx.DataPlaneCtx`; the :class:`TableSet`;
+    model params; one example batch (shapes drive AOT compilation); an
+    :class:`EngineConfig` (set ``cfg.mesh`` for sharded serving); and
+    ``enable=False`` to pin the generic executable (baselines).
+    """
+
     def __init__(self, user_step: Callable, tables: TableSet, params,
                  example_batch, cfg: Optional[EngineConfig] = None,
                  enable: bool = True):
         self.engine = MorpheusEngine(user_step, tables, cfg)
         self.tables = tables
-        self.params = params
         self.enable = enable
         self.stats = RuntimeStats()
         self.controller = AdaptiveController(self.engine.cfg.sketch)
+        self.mesh = self.engine.cfg.mesh
 
         self.analysis = self.engine.analyze(params, example_batch)
-        self.state: PlaneState = self.engine.init_state()
+        self.params = self._place_params(params)
+        self.state: PlaneState = self._place_state(self.engine.init_state())
 
         self._execs: Dict[Any, Callable] = {}
         self._lock = threading.Lock()
         self._compiling = False
         self._queued: List[tuple] = []
+        self._snapshot_worker: Optional[TableSnapshotWorker] = None
+        self._closed = False
+        self._merge_fn: Optional[Callable] = None
+        self._batch_sh_cache: Dict[Any, Any] = {}
+        self.last_snapshot: Optional[VersionedSnapshot] = None
 
         # generic + generic-instrumented executables (always available)
         self.generic_plan = self.engine.generic_plan()
+        example_batch = self._place_batch(example_batch)
         self.generic_exec = self._get_exec(self.generic_plan, example_batch)
         self.generic_instr_exec = self._get_exec(
             self.engine.generic_plan(instrumented=True), example_batch)
@@ -83,6 +128,50 @@ class MorpheusRuntime:
         self.instr_exec = self.generic_instr_exec
         self._example_batch = example_batch
         self._generic_oracles: Dict[Any, Callable] = {}
+
+        # warm the plan-time psum merge now, while nothing is serving:
+        # its one-time jit compile must never happen under the runtime
+        # lock (it would stall every in-flight step behind t1)
+        if self.mesh is not None and self.state.instr:
+            jax.block_until_ready(
+                self._merge_instr_on_device(self.state.instr))
+
+    # ---- mesh placement ----------------------------------------------------
+    def _place_params(self, params):
+        """Replicate params over the mesh (no-op without one)."""
+        if self.mesh is None:
+            return params
+        from jax.sharding import NamedSharding, PartitionSpec
+        return jax.device_put(params,
+                              NamedSharding(self.mesh, PartitionSpec()))
+
+    def _place_state(self, state: PlaneState) -> PlaneState:
+        """Lay a PlaneState out over the mesh: tables/guards replicated,
+        sketches device-local (no-op without a mesh)."""
+        if self.mesh is None:
+            return state
+        from ..distributed.sharding import plane_state_shardings
+        return jax.device_put(
+            state, plane_state_shardings(state, self.mesh,
+                                         self.engine.cfg.instr_axes))
+
+    def _place_batch(self, batch):
+        """Shard a request batch's leading dim over the mesh (no-op
+        without one).  The sharding pytree is cached per batch
+        structure/shape — batch shapes are pinned by the AOT-compile
+        contract, so steady-state steps pay one dict probe, not a
+        tree_map of fresh NamedShardings."""
+        if self.mesh is None:
+            return batch
+        leaves, treedef = jax.tree_util.tree_flatten(batch)
+        key = (treedef, tuple(tuple(l.shape) for l in leaves))
+        sh = self._batch_sh_cache.get(key)
+        if sh is None:
+            from ..distributed.sharding import plane_batch_shardings
+            sh = plane_batch_shardings(batch, self.mesh,
+                                       self.engine.cfg.instr_axes)
+            self._batch_sh_cache[key] = sh
+        return jax.device_put(batch, sh)
 
     # ------------------------------------------------------------------
     def _get_exec(self, plan: SpecializationPlan, batch) -> Callable:
@@ -96,6 +185,10 @@ class MorpheusRuntime:
 
     # ---- the data plane entry point ----------------------------------
     def step(self, batch):
+        """Run one serving step; returns the user output.  Dispatch is
+        the paper's three-way choice: deopt to generic when the program
+        guard trips, the instrumented twin on sampled steps, else the
+        specialized executable."""
         self.stats.steps += 1
         # program-level guard: ONE host compare covers every RO table
         if self.tables.version != self.plan.version:
@@ -107,6 +200,7 @@ class MorpheusRuntime:
         else:
             exec_ = self.exec
 
+        batch = self._place_batch(batch)
         # execute + commit under the lock: the executable donates the
         # state's buffers, so nobody may read or replace self.state
         # between dispatch and the commit of the fresh state.
@@ -119,6 +213,7 @@ class MorpheusRuntime:
         state — the reference-semantics oracle.  Uses a non-donating
         twin of the generic executable (compiled per batch shape) so the
         live state is neither consumed nor copied."""
+        batch = self._place_batch(batch)
         leaves, treedef = jax.tree_util.tree_flatten(batch)
         key = (treedef, tuple((tuple(l.shape), str(l.dtype))
                               for l in leaves))
@@ -131,18 +226,59 @@ class MorpheusRuntime:
                                                 batch)
         return out
 
+    # ---- instrumentation readout -------------------------------------
+    def _merge_instr_on_device(self, instr):
+        """psum-merge the per-device sketch slices into global sketches
+        (replicated) — one jitted collective per recompile, not a host
+        gather of every slice."""
+        if self._merge_fn is None:
+            mesh = self.mesh
+            axes = self.engine.cfg.instr_axes
+
+            def merge_all(tree):
+                return {sid: (instrument.merge_on_device(st, mesh, axes)
+                              if instrument.n_shards(st) is not None
+                              else st)
+                        for sid, st in tree.items()}
+
+            self._merge_fn = jax.jit(merge_all)
+        return self._merge_fn(instr)
+
     def _host_instr_snapshot(self) -> Dict[str, Dict[str, Any]]:
         """Host copy of the instrumentation sketches, taken under the
         runtime lock so no in-flight step can donate the buffers
-        mid-copy."""
-        import numpy as np
+        mid-copy.  On a mesh the per-device slices are psum-merged on
+        device first, so the host (and the pass registry) always sees
+        ONE global traffic snapshot regardless of topology."""
         with self._lock:
+            instr = self.state.instr
+            if self.mesh is not None and instr:
+                instr = self._merge_instr_on_device(instr)
             return {sid: {k: np.asarray(v) for k, v in st.items()}
-                    for sid, st in self.state.instr.items()}
+                    for sid, st in instr.items()}
 
     # ---- control plane -------------------------------------------------
+    @property
+    def snapshot_worker(self) -> TableSnapshotWorker:
+        """The off-thread t1 snapshotter (created on first use; raises
+        after :meth:`close` so a racing background recompile cannot
+        silently resurrect the thread).  A finalizer stops the worker
+        when the runtime is garbage-collected, so callers that never
+        bother with :meth:`close` (examples, benchmarks building
+        runtimes in a loop) do not accumulate parked threads."""
+        if self._closed:
+            raise RuntimeError("runtime closed")
+        if self._snapshot_worker is None:
+            worker = TableSnapshotWorker(self.tables)
+            self._snapshot_worker = worker
+            weakref.finalize(self, worker.stop)
+        return self._snapshot_worker
+
     def control_update(self, name: str, fields, n_valid=None) -> None:
-        """Queued while a compile is in flight (§4.4), else applied now."""
+        """Control-plane table write.  Queued while a compile is in
+        flight (§4.4), else applied now; either way the device copy is
+        refreshed and the program guard deopts specialized executables
+        until the next recompile."""
         with self._lock:
             if self._compiling:
                 self._queued.append((name, fields, n_valid))
@@ -156,17 +292,30 @@ class MorpheusRuntime:
         with self._lock:
             tables = dict(self.state.tables)
             tables[name] = self.tables[name].device_arrays()
+            if self.mesh is not None:
+                from jax.sharding import NamedSharding, PartitionSpec
+                tables[name] = jax.device_put(
+                    tables[name],
+                    NamedSharding(self.mesh, PartitionSpec()))
             self.state = self.state.replace(tables=tables)
+        if self._snapshot_worker is not None:
+            self._snapshot_worker.request()   # refresh snapshot off-thread
 
     def set_feature(self, name: str, value: bool) -> None:
+        """Flip a control-plane feature flag.  Bumps the table version:
+        flags are control-plane state, so the program guard deopts any
+        executable compiled with the old pinning."""
         self.engine.cfg.features[name] = value
-        self.tables.version += 1        # flags are control-plane state
+        self.tables.bump_version(f"flag:{name}")   # control-plane state
+        if self._snapshot_worker is not None:
+            self._snapshot_worker.request()
 
     # ---- recompilation ---------------------------------------------------
     def recompile(self, block: bool = True) -> Optional[dict]:
         """Run one Morpheus compilation cycle (§4.4).  block=False runs on
         a background thread — the data plane keeps executing the old code
-        meanwhile."""
+        meanwhile.  Even with block=True the t1 table snapshot runs on
+        the snapshot worker's thread, never this one."""
         if not self.enable:
             return None
         if block:
@@ -183,8 +332,14 @@ class MorpheusRuntime:
         with self._lock:
             self._compiling = True
         try:
+            # t1: versioned snapshot handoff (copied on the worker
+            # thread) + merged instrumentation readout + pass planning
+            snap = self.snapshot_worker.get(self.tables.version)
+            self.last_snapshot = snap
+            self.stats.snapshot_versions.append(snap.version)
             instr = self._host_instr_snapshot()
-            plan, t1, pass_stats = self.engine.build_plan(instr)
+            plan, t1, pass_stats = self.engine.build_plan(
+                instr, snapshot=snap.tables, version=snap.version)
             self.stats.t1_history.append(t1)
             self.stats.pass_stats = pass_stats
             instr_plan = SpecializationPlan(
@@ -195,8 +350,8 @@ class MorpheusRuntime:
 
             # update hot-set stability -> adapt sampling cadence
             for sid, st in instr.items():
-                from . import instrument
-                hot, cov, _ = instrument.hot_keys(st, self.engine.cfg.sketch)
+                hot, cov, _ = instrument.hot_keys(st,
+                                                  self.engine.cfg.sketch)
                 self.controller.observe(sid, hot)
 
             t0 = time.time()
@@ -205,22 +360,42 @@ class MorpheusRuntime:
                 self.plan, self.exec, self.instr_exec = \
                     plan, new_exec, new_instr
                 # reset sketch window + revalidate RW guards for the new code
-                self.state = self.state.replace(
+                self.state = self._place_state(self.state.replace(
                     instr=self.engine.init_instr_state(),
-                    guards=self.engine.init_guards())
-                self._compiling = False
-                queued, self._queued = self._queued, []
+                    guards=self.engine.init_guards()))
             self.stats.swap_history.append(time.time() - t0)
             self.stats.recompiles += 1
             self.stats.swaps += 1
-            for (name, fields, n_valid) in queued:   # replay (§4.4)
-                self._apply_update(name, fields, n_valid)
             return {"t1": t1, "pass_stats": pass_stats,
                     "plan": plan.label, "n_sites": len(plan.sites)}
         finally:
-            with self._lock:
-                self._compiling = False
+            # drain queued control updates (§4.4 replay) BEFORE clearing
+            # _compiling, in FIFO order: updates arriving during the
+            # drain keep queueing behind the ones being replayed, so a
+            # replayed stale write can never land on top of a newer
+            # concurrent one.  Runs on the failure path too — a recompile
+            # that died (e.g. closed runtime) must not strand updates.
+            while True:
+                with self._lock:
+                    queued, self._queued = self._queued, []
+                    if not queued:
+                        self._compiling = False
+                        break
+                for (name, fields, n_valid) in queued:
+                    self._apply_update(name, fields, n_valid)
 
     # ---- introspection -----------------------------------------------------
     def hot_experts(self) -> Optional[Tuple[int, ...]]:
+        """Hot set of the active plan's MoE fast path, or None."""
         return self.plan.hot_experts(self.engine.cfg.moe_router_table)
+
+    def close(self) -> None:
+        """Stop the snapshot worker thread.  Idempotent.  The runtime
+        remains usable for stepping (and an in-flight background
+        recompile finishes or fails cleanly), but further recompiles
+        raise — a closed runtime never restarts the worker behind the
+        caller's back."""
+        self._closed = True
+        if self._snapshot_worker is not None:
+            self._snapshot_worker.stop()
+            self._snapshot_worker = None

@@ -37,6 +37,7 @@ class SpecializationPlan:
     label: str = "generic"
 
     def site(self, site_id: str) -> Optional[SiteSpec]:
+        """The SiteSpec planned for ``site_id`` (None = stay generic)."""
         for sid, spec in self.sites:
             if sid == site_id:
                 return spec

@@ -18,6 +18,16 @@ The three fields:
   instr   site id    -> sketch state (count-min + candidate ring)
   guards  table name -> (1,) int32, nonzero once the data plane wrote the
           table (the in-graph RW site guard, §4.3.6)
+
+Every executable compiled by the engine follows one contract::
+
+    step(params, state: PlaneState, batch) -> (out, PlaneState)
+
+On a device mesh (``EngineConfig.mesh``) the canonical placement is
+tables/guards replicated and each ``instr`` sketch leaf carrying a
+leading per-device shard axis laid out over the mesh — built by
+:func:`repro.distributed.sharding.plane_state_shardings` and installed
+automatically by ``MorpheusEngine.compile``.
 """
 from __future__ import annotations
 
@@ -32,11 +42,18 @@ Array = Any
 
 @dataclass
 class PlaneState:
+    """The data plane's entire device state as one registered pytree.
+
+    Thread it through every step (``step(params, state, batch) ->
+    (out, state)``); never hold a reference to a state already handed to
+    a donating executable — its buffers may have been reused."""
     tables: Dict[str, Dict[str, Array]]
     instr: Dict[str, Dict[str, Array]]
     guards: Dict[str, Array]
 
     def replace(self, **kw) -> "PlaneState":
+        """A new PlaneState with the given fields swapped (leaves are
+        shared, not copied)."""
         return dataclasses.replace(self, **kw)
 
     def copy(self) -> "PlaneState":

@@ -77,7 +77,12 @@ class TableSet:
 
     def control_update(self, name: str, fields: Dict[str, np.ndarray],
                        n_valid: Optional[int] = None) -> int:
-        """Control-plane write: replaces field contents, bumps version."""
+        """Control-plane write: replaces field contents, bumps version.
+
+        Writes are copy-on-write — each updated field gets a *fresh*
+        array and the old one is never mutated — so snapshots taken by
+        :meth:`cow_snapshot` stay internally consistent without copying
+        any data."""
         with self._lock:
             t = self.tables[name]
             for k, v in fields.items():
@@ -90,12 +95,42 @@ class TableSet:
             self._update_log.append((name, self.version))
             return self.version
 
+    def bump_version(self, reason: str = "flags") -> int:
+        """Bump the control-plane version without touching any table —
+        used for non-table control-plane state (feature flags).  Locked,
+        so concurrent ``control_update`` bumps are never lost and the
+        version/content pairing :meth:`cow_snapshot` relies on stays
+        exact."""
+        with self._lock:
+            self.version += 1
+            self._update_log.append((reason, self.version))
+            return self.version
+
     def device_state(self) -> Dict[str, Dict[str, jax.Array]]:
+        """Device copies of every table's fields (table -> field ->
+        ``jax.Array``) — the ``tables`` component of a fresh
+        :class:`~repro.core.state.PlaneState`."""
         return {n: t.device_arrays() for n, t in self.tables.items()}
 
     def snapshot(self) -> Dict[str, Table]:
+        """Deep host copy of every table, taken under the TableSet lock.
+        O(bytes); prefer :meth:`cow_snapshot` on hot paths."""
         with self._lock:
             return {n: t.snapshot() for n, t in self.tables.items()}
+
+    def cow_snapshot(self) -> Tuple[int, Dict[str, Table]]:
+        """Copy-on-write snapshot: ``(version, tables)`` sharing field
+        arrays by reference.  O(#tables), not O(bytes) — safe because
+        :meth:`control_update` replaces field arrays instead of mutating
+        them in place.  The version is read under the same lock, so the
+        pair is consistent: the returned tables are exactly the contents
+        at that version."""
+        with self._lock:
+            tabs = {n: Table(t.name, dict(t.fields), t.n_valid,
+                             t.mutability, t.instrument, t.max_inline,
+                             t.default)
+                    for n, t in self.tables.items()}
+            return self.version, tabs
 
 
 # ---------------------------------------------------------------------------

@@ -42,6 +42,26 @@ class MeshPolicy:
         return n
 
 
+def data_plane_mesh(n_devices: Optional[int] = None,
+                    axis: str = "data") -> Optional[jax.sharding.Mesh]:
+    """One-dimensional serving mesh over the host's devices — the layout
+    the sharded :class:`~repro.core.runtime.MorpheusRuntime` expects
+    (batch and instrumentation sketches laid out over ``axis``, tables
+    replicated).  Returns ``None`` on single-device hosts so callers can
+    degrade to the plain single-device runtime with no special casing:
+
+        mesh = data_plane_mesh()            # None on a laptop
+        cfg = EngineConfig(mesh=mesh)       # mesh=None => unsharded
+    """
+    import numpy as np
+    devs = jax.devices()
+    if n_devices is not None:
+        devs = devs[:n_devices]
+    if len(devs) <= 1:
+        return None
+    return jax.sharding.Mesh(np.array(devs), (axis,))
+
+
 _CURRENT: Optional[MeshPolicy] = None
 
 # Morpheus hot-expert plan for the TRAINING backend: when set (a tuple of

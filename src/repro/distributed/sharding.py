@@ -116,6 +116,52 @@ def tree_device_bytes(tree_pspec, mesh: Mesh, rules: Rules) -> int:
                                             is_leaf=is_pspec)))
 
 
+# ---------------------------------------------------------------------------
+# Data-plane (Morpheus serving) placement
+# ---------------------------------------------------------------------------
+
+def plane_state_shardings(state, mesh: Mesh,
+                          instr_axes: Tuple[str, ...] = ("data",)):
+    """Per-leaf ``NamedSharding`` prefix for a ``PlaneState``:
+
+      * ``tables`` — replicated (every device serves lookups against a
+        full copy of the match-action maps; control-plane pushes refresh
+        all replicas at once),
+      * ``instr``  — device-local (each sketch leaf carries a leading
+        shard axis laid out over ``instr_axes``; devices record their own
+        traffic, merged only at plan time),
+      * ``guards`` — replicated (the in-graph RW guard is a broadcast
+        flag).
+
+    The returned object is itself a ``PlaneState`` (of shardings), which
+    is a valid pytree prefix for ``MorpheusEngine.compile``'s
+    ``in_shardings``/``out_shardings``."""
+    rep = NamedSharding(mesh, P())
+    local = NamedSharding(mesh, P(tuple(instr_axes)))
+    return state.replace(
+        tables=jax.tree.map(lambda _: rep, state.tables),
+        instr=jax.tree.map(lambda _: local, state.instr),
+        guards=jax.tree.map(lambda _: rep, state.guards))
+
+
+def plane_batch_shardings(batch, mesh: Mesh,
+                          axes: Tuple[str, ...] = ("data",)):
+    """Request-batch placement for the serving data plane: leading
+    (batch) dim sharded over ``axes`` when divisible, scalars and
+    indivisible leaves replicated."""
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+
+    def f(x):
+        shape = getattr(x, "shape", ())
+        if len(shape) >= 1 and shape[0] % n == 0:
+            return NamedSharding(mesh, P(tuple(axes)))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(f, batch)
+
+
 def batch_shardings(batch_specs: dict, mesh: Mesh, rules: Rules):
     """Data-batch inputs: shard the leading (batch) dim; pos scalars are
     replicated."""

@@ -2,6 +2,13 @@
 
     python -m repro.launch.serve --steps 200 --locality high
     python -m repro.launch.serve --steps 200 --no-morpheus   # baseline
+    python -m repro.launch.serve --steps 200 --mesh auto     # sharded
+
+With ``--mesh auto`` (the default) the runtime spans every local device
+as a 1-D ``("data",)`` mesh: batches and instrumentation sketches are
+device-local, tables replicated, and the plan is built from the
+psum-merged global traffic snapshot.  On a 1-device host this degrades
+to the classic single-device runtime.
 """
 from __future__ import annotations
 
@@ -13,13 +20,18 @@ import jax
 import numpy as np
 
 from ..core import EngineConfig, MorpheusRuntime, SketchConfig
+from ..distributed.meshctx import data_plane_mesh
 from ..serving import ServeConfig, build_params, build_tables, \
     make_request_batch, make_serve_step
 
 
 def run_serve(steps=200, locality="high", morpheus=True,
               recompile_every=50, batch_size=8, skew_router=True,
-              quiet=False, serve_cfg=None, features=None):
+              quiet=False, serve_cfg=None, features=None, mesh="auto"):
+    """Drive the serving data plane for ``steps`` batches and return
+    ``(stats, runtime)``.  ``mesh`` is "auto" (span all local devices,
+    or single-device when there is only one), "none" (force
+    single-device), or a prebuilt ``jax.sharding.Mesh``."""
     cfg = serve_cfg or ServeConfig()
     key = jax.random.PRNGKey(0)
     params = build_params(cfg, key)
@@ -33,11 +45,17 @@ def run_serve(steps=200, locality="high", morpheus=True,
             lp["moe"]["b_router"] = jnp.asarray(bias)
     tables = build_tables(cfg, key)
     step_fn = make_serve_step(cfg)
+    if mesh == "auto":
+        mesh = data_plane_mesh()
+    elif mesh == "none":
+        mesh = None
+    n_dev = mesh.size if mesh is not None else 1
     ecfg = EngineConfig(
         sketch=SketchConfig(sample_every=4, max_hot=4, hot_coverage=0.8),
         features=features or {"vision_enabled": False,
                               "track_sessions": True},
-        moe_router_table="router")
+        moe_router_table="router",
+        mesh=mesh)
     rt = MorpheusRuntime(step_fn, tables, params,
                          make_request_batch(cfg, key, batch_size),
                          cfg=ecfg, enable=morpheus)
@@ -61,6 +79,7 @@ def run_serve(steps=200, locality="high", morpheus=True,
     lat = np.array(lat)
     stats = {
         "steps": steps,
+        "n_devices": n_dev,
         "req_per_s": steps * batch_size / lat.sum(),
         "p50_ms": float(np.percentile(lat, 50) * 1e3),
         "p99_ms": float(np.percentile(lat, 99) * 1e3),
@@ -70,6 +89,7 @@ def run_serve(steps=200, locality="high", morpheus=True,
     }
     if not quiet:
         print(f"[serve] locality={locality} morpheus={morpheus} "
+              f"devices={n_dev} "
               f"{stats['req_per_s']:.1f} req/s p50={stats['p50_ms']:.1f}ms "
               f"p99={stats['p99_ms']:.1f}ms deopt={rt.stats.deopt_steps} "
               f"instr={rt.stats.instr_steps}", flush=True)
@@ -84,11 +104,15 @@ def main(argv=None) -> int:
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--recompile-every", type=int, default=50)
     ap.add_argument("--no-morpheus", action="store_true")
+    ap.add_argument("--mesh", default="auto", choices=["auto", "none"],
+                    help="'auto': span all local devices; 'none': force "
+                         "single-device")
     args = ap.parse_args(argv)
-    run_serve(steps=args.steps, locality=args.locality,
-              morpheus=not args.no_morpheus,
-              recompile_every=args.recompile_every,
-              batch_size=args.batch_size)
+    _, rt = run_serve(steps=args.steps, locality=args.locality,
+                      morpheus=not args.no_morpheus,
+                      recompile_every=args.recompile_every,
+                      batch_size=args.batch_size, mesh=args.mesh)
+    rt.close()
     return 0
 
 

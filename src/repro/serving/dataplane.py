@@ -16,6 +16,13 @@ full table cast of the paper mapped into the ML domain:
 
 Feature flags (control plane): ``vision_enabled`` (the QUIC-branch
 analogue) and ``track_sessions``.
+
+This data plane is mesh-agnostic: under a sharded runtime
+(``EngineConfig(mesh=...)``) the tables are replicated, the request
+batch's leading dim is sharded over the mesh, and the router/embedding
+instrumentation records per device — nothing here changes.  Keep
+``batch_size`` a multiple of the device count so batches shard evenly
+(``plane_batch_shardings`` replicates indivisible batches instead).
 """
 from __future__ import annotations
 

@@ -1,0 +1,190 @@
+"""Sharded serving runtime: per-device sketches, psum merge, plan parity.
+
+These run in subprocesses because the placeholder host-device count must
+be set before jax initializes (and the main test process must keep seeing
+exactly one device) — the same idiom as test_sharding_elastic."""
+import os
+import subprocess
+import sys
+import textwrap
+
+ENV = {**os.environ, "PYTHONPATH": "src"}
+
+
+def _run(code: str, devices: int = 4) -> subprocess.CompletedProcess:
+    prog = (f"import os\n"
+            f"os.environ['XLA_FLAGS'] = "
+            f"'--xla_force_host_platform_device_count={devices}'\n"
+            + textwrap.dedent(code))
+    return subprocess.run([sys.executable, "-c", prog],
+                          capture_output=True, text=True, env=ENV,
+                          cwd=os.getcwd(), timeout=560)
+
+
+def test_sharded_record_merge_equals_single_device():
+    """merge(record_sharded(stream)) == record(stream), count-for-count:
+    the count-min sketch is linear, so per-device recording followed by
+    the psum merge reproduces the single-device traffic snapshot."""
+    r = _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import instrument
+    from repro.core.instrument import SketchConfig
+    from repro.distributed.meshctx import data_plane_mesh
+
+    # ring large enough to retain every seen key: the candidate sets of
+    # the single ring and the merged per-device rings are then equal, so
+    # the heavy-hitter readout must match exactly (the count-min rows
+    # and totals are equal by linearity regardless)
+    cfg = SketchConfig(candidates=1024)
+    mesh = data_plane_mesh()
+    assert mesh is not None and mesh.size == 4
+
+    rng = np.random.default_rng(0)
+    # skewed stream: key i appears 40-4i times (distinct frequencies),
+    # plus a sprinkle of cold keys
+    base = np.concatenate([np.repeat(i, 40 - 4 * i) for i in range(8)])
+    streams = []
+    for _ in range(5):
+        s = np.concatenate([base, rng.integers(100, 2000, 8)])
+        rng.shuffle(s)
+        streams.append(jnp.asarray(s, jnp.int32))
+
+    single = instrument.init_site_state(cfg)
+    sharded = jax.device_put(instrument.init_site_state(cfg, 4),
+                             NamedSharding(mesh, P("data")))
+    rec = jax.jit(lambda st, k: instrument.record_sharded(
+        st, k, cfg, mesh, ("data",)))
+    for keys in streams:
+        single = instrument.record(single, keys, cfg)
+        sharded = rec(sharded, jax.device_put(
+            keys, NamedSharding(mesh, P("data"))))
+
+    # host-side merge
+    merged = instrument.merge_shards(sharded)
+    np.testing.assert_array_equal(merged["cms"],
+                                  np.asarray(single["cms"]))
+    assert int(merged["total"]) == int(single["total"])
+
+    # device-side psum merge agrees with the host merge
+    dev = jax.jit(lambda st: instrument.merge_on_device(
+        st, mesh, ("data",)))(sharded)
+    np.testing.assert_array_equal(np.asarray(dev["cms"]), merged["cms"])
+    assert int(dev["total"]) == int(merged["total"])
+
+    # and the heavy-hitter readout is identical
+    h1, c1, t1 = instrument.hot_keys(single, cfg)
+    h2, c2, t2 = instrument.hot_keys(
+        {k: jnp.asarray(v) for k, v in merged.items()}, cfg)
+    assert t1 == t2 and abs(c1 - c2) < 1e-9
+    np.testing.assert_array_equal(h1, h2)
+    print("OK merge")
+    """)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK merge" in r.stdout
+
+
+def test_sharded_plan_identical_to_single_device():
+    """Same traffic through a 4-device runtime and a single-device
+    runtime yields the SAME specialization plan: the psum-merged global
+    snapshot feeds the pass registry exactly what one device would have
+    recorded."""
+    r = _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import EngineConfig, MorpheusRuntime, SketchConfig
+    from repro.distributed.meshctx import data_plane_mesh
+    from repro.serving import ServeConfig, build_params, build_tables, \\
+        make_request_batch, make_serve_step
+
+    cfg = ServeConfig()
+    key = jax.random.PRNGKey(0)
+
+    def make_rt(mesh):
+        params = build_params(cfg, key)
+        for lp in params["layers"]:
+            bias = np.zeros(cfg.n_experts, np.float32)
+            bias[:3] = 6.0
+            lp["moe"]["b_router"] = jnp.asarray(bias)
+        ecfg = EngineConfig(
+            sketch=SketchConfig(sample_every=2, max_hot=4,
+                                hot_coverage=0.5),
+            features={"vision_enabled": False, "track_sessions": True},
+            moe_router_table="router", mesh=mesh)
+        return MorpheusRuntime(make_serve_step(cfg), build_tables(cfg, key),
+                               params, make_request_batch(cfg, key),
+                               cfg=ecfg)
+
+    mesh = data_plane_mesh()
+    assert mesh is not None and mesh.size == 4
+    rt1, rt4 = make_rt(None), make_rt(mesh)
+    for i in range(12):
+        b = make_request_batch(cfg, jax.random.PRNGKey(i), 8, "high")
+        rt1.step(b)
+        rt4.step(b)
+    info1 = rt1.recompile(block=True)
+    info4 = rt4.recompile(block=True)
+    assert rt1.plan.key == rt4.plan.key, (rt1.plan, rt4.plan)
+    assert rt1.hot_experts() == rt4.hot_experts()
+    assert info1["pass_stats"] == info4["pass_stats"]
+
+    # and both still agree with the generic oracle on outputs
+    b = make_request_batch(cfg, jax.random.PRNGKey(99), 8, "high")
+    o4 = rt4.step(b)
+    g4 = rt4.run_generic(b)
+    err = float(jnp.abs(o4 - g4).max())
+    assert err < 1e-4, err
+    rt1.close(); rt4.close()
+    print("OK plan-parity", err)
+    """)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK plan-parity" in r.stdout
+
+
+def test_serve_driver_sharded():
+    """launch/serve.py on a forced 4-device host: runs end to end with
+    per-device instrumentation (sharded sketch leaves), recompiles, and
+    serves the specialized plan."""
+    r = _run("""
+    import jax
+    from repro.core import instrument
+    from repro.launch.serve import run_serve
+    stats, rt = run_serve(steps=24, recompile_every=12, quiet=True)
+    assert stats["n_devices"] == 4
+    assert rt.stats.recompiles == 2
+    assert rt.stats.instr_steps > 0
+    for sid, st in rt.state.instr.items():
+        assert instrument.n_shards(st) == 4, (sid, st["cms"].shape)
+    assert rt.hot_experts() is not None
+    rt.close()
+    print("OK serve-sharded")
+    """)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK serve-sharded" in r.stdout
+
+
+def test_control_update_on_mesh_deopts_then_respecializes():
+    """Control-plane writes on the sharded runtime behave like the
+    single-device one: guard deopt, then a recompile restores the
+    specialized plan with the refreshed (replicated) table."""
+    r = _run("""
+    import jax, numpy as np
+    from repro.launch.serve import run_serve
+    stats, rt = run_serve(steps=12, recompile_every=6, quiet=True)
+    v0 = rt.plan.version
+    rt.control_update("req_class",
+                      {"temperature": np.full(4, 2.0, np.float32)})
+    assert rt.tables.version != rt.plan.version     # guard will deopt
+    from repro.serving import ServeConfig, make_request_batch
+    b = make_request_batch(ServeConfig(), jax.random.PRNGKey(5), 8)
+    rt.step(b)
+    assert rt.stats.deopt_steps >= 1
+    rt.recompile(block=True)
+    assert rt.plan.version == rt.tables.version
+    # replicated refresh reached every device
+    t = rt.state.tables["req_class"]["temperature"]
+    assert float(np.asarray(t)[0]) == 2.0
+    rt.close()
+    print("OK ctl-update")
+    """)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK ctl-update" in r.stdout

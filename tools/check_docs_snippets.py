@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""Check that the Python snippets quoted in README/docs actually run.
+
+For every markdown file given (default: README.md docs/*.md), extract the
+fenced ```python blocks, concatenate the blocks of each file in order
+(blocks share one namespace, doctest-style, so a later block can use a
+runtime built by an earlier one), and execute the result in a fresh
+subprocess with PYTHONPATH=src.
+
+A block whose first line contains ``# snippet: no-run`` is skipped —
+reserve that for genuinely illustrative pseudo-code; everything else in
+the docs must be real, current API.
+
+    python tools/check_docs_snippets.py
+    python tools/check_docs_snippets.py README.md docs/PASSES.md
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import subprocess
+import sys
+
+FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def extract(path: str) -> list:
+    with open(path) as f:
+        text = f.read()
+    blocks = [m.group(1) for m in FENCE.finditer(text)]
+    return [b for b in blocks if "# snippet: no-run" not in b]
+
+
+def check_file(path: str) -> bool:
+    blocks = extract(path)
+    if not blocks:
+        print(f"[docs] {path}: no python snippets")
+        return True
+    prog = "\n\n".join(blocks)
+    env = {**os.environ,
+           "PYTHONPATH": os.path.join(ROOT, "src")
+           + os.pathsep + os.environ.get("PYTHONPATH", "")}
+    try:
+        r = subprocess.run([sys.executable, "-c", prog], env=env,
+                           cwd=ROOT, capture_output=True, text=True,
+                           timeout=900)
+    except subprocess.TimeoutExpired:
+        print(f"[docs] {path}: FAILED (timeout after 900s, "
+              f"{len(blocks)} blocks)")
+        return False
+    if r.returncode != 0:
+        print(f"[docs] {path}: FAILED ({len(blocks)} blocks)")
+        sys.stderr.write(r.stdout[-2000:] + "\n" + r.stderr[-4000:] + "\n")
+        return False
+    print(f"[docs] {path}: OK ({len(blocks)} blocks)")
+    return True
+
+
+def main(argv) -> int:
+    paths = argv or (["README.md"] + sorted(glob.glob("docs/*.md")))
+    ok = True
+    for p in paths:
+        ok = check_file(p) and ok
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
