@@ -40,7 +40,11 @@ def run() -> list:
             sketch=SketchConfig(sample_every=2, max_hot=4,
                                 hot_coverage=0.5),
             features={"vision_enabled": False, "track_sessions": True},
-            moe_router_table="router")
+            moe_router_table="router",
+            # Table 3 measures the FULL pipeline per cycle; with the
+            # signature cache on, the forced version bump below would
+            # just revalidate (zero t2).  bench_plan_churn measures that.
+            signature_cache=False)
         t0 = time.time()
         rt = MorpheusRuntime(make_serve_step(cfg), tables, params,
                              make_request_batch(cfg,

@@ -1,0 +1,178 @@
+"""Plan-churn benchmark — steady-state recompile cost when the control
+plane oscillates and traffic alternates between hot sets (the paper's
+traffic-dynamics workload, §6).
+
+Three churn patterns, each driven twice — with the signature-keyed
+:class:`ExecutableCache` (PR 3) and with the version-keyed baseline
+(``EngineConfig.signature_cache=False``, the pre-cache behavior where
+every plan carries its TableSet version into the executable key):
+
+  control_bump  a control-plane version bump per cycle, plan unchanged
+                -> the revalidation fast path (restamp, zero t2)
+  flag_flip     a feature flag toggling A/B per cycle
+                -> alternating signatures, served from the cache
+  hotset        traffic alternating between hot sets A and B per phase
+                -> alternating *planned* signatures, served from the cache
+
+Reported per workload and mode: steady-state recompile-cycle latency
+(median wall seconds of ``recompile(block=True)``) and XLA compiles per
+cycle.  ``json_record()`` returns the machine-readable result that
+``benchmarks/run.py`` (and the CI smoke job) write to
+``BENCH_plan_churn.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core import EngineConfig, MorpheusRuntime, SketchConfig
+from repro.serving import ServeConfig, build_params, build_tables, \
+    make_request_batch, make_serve_step
+
+from ._util import emit
+
+_LAST: dict = {}
+
+
+def _build_runtime(cfg: ServeConfig, signature_cache: bool):
+    params = build_params(cfg, jax.random.PRNGKey(0))
+    # diverse temperatures: const-prop must not claim req_class, so the
+    # traffic fast-path pass is free to track the oscillating hot set
+    tables = build_tables(cfg, jax.random.PRNGKey(0),
+                          uniform_temperature=False)
+    ecfg = EngineConfig(
+        sketch=SketchConfig(sample_every=2, max_hot=4, hot_coverage=0.5),
+        features={"vision_enabled": False, "track_sessions": True},
+        moe_router_table="router",
+        signature_cache=signature_cache)
+    rt = MorpheusRuntime(make_serve_step(cfg), tables, params,
+                         make_request_batch(cfg, jax.random.PRNGKey(0)),
+                         cfg=ecfg)
+    # pin the sampling cadence: the benchmark needs identical
+    # instrumentation per repeated phase, not an adapting controller
+    rt.controller.min_every = rt.controller.max_every = 2
+    rt.controller.sample_every = 2
+    return rt
+
+
+def _drive(rt, cfg: ServeConfig, workload: str, cycles: int,
+           steps_per_phase: int, warmup: int):
+    """Run ``warmup + cycles`` churn cycles; measure the last ``cycles``.
+    Batch seeds are fixed per phase parity so a returning phase replays
+    identical traffic (and therefore replans an identical signature)."""
+    eng = rt.engine
+    cycle_s, compiles = [], []
+    for c in range(warmup + cycles):
+        parity = c % 2
+        # phase traffic first (instrumented twins sample it), THEN the
+        # control-plane churn, THEN the cycle's recompile — a bump
+        # before the steps would deopt them to the uninstrumented
+        # generic executable and blind the sketches
+        # only the hotset workload alternates traffic; the others replay
+        # identical batches every cycle so the planned signature moves
+        # for exactly one reason (the version bump / the flag)
+        tp = parity if workload == "hotset" else 0
+        kw = dict(locality="high", hot_offset=11 * tp)
+        for i in range(steps_per_phase):
+            b = make_request_batch(cfg,
+                                   jax.random.PRNGKey(1000 * tp + i),
+                                   8, **kw)
+            jax.block_until_ready(rt.step(b))
+        if workload == "control_bump":
+            rt.tables.bump_version("churn")      # plan will not change
+        elif workload == "flag_flip":
+            rt.set_feature("vision_enabled", parity == 0)
+        elif workload == "hotset":
+            # the paper's combined churn: control-plane bumps keep
+            # arriving WHILE traffic oscillates between hot sets — the
+            # version-keyed baseline recompiles every cycle, the
+            # signature cache reuses the A and B executables
+            rt.tables.bump_version("churn")
+        n0 = eng.compile_count
+        t0 = time.time()
+        rt.recompile(block=True)
+        if c >= warmup:
+            cycle_s.append(time.time() - t0)
+            compiles.append(eng.compile_count - n0)
+    return {
+        "cycle_s_median": float(np.median(cycle_s)),
+        "cycle_s_mean": float(np.mean(cycle_s)),
+        "compiles_per_cycle": float(np.mean(compiles)),
+        "cycles_measured": len(cycle_s),
+        "revalidations": rt.stats.revalidations,
+        "cache_hits": rt.stats.cache_hits,
+        "cache_misses": rt.stats.cache_misses,
+    }
+
+
+WORKLOADS = ("control_bump", "flag_flip", "hotset")
+
+
+def run(tiny: bool = False) -> list:
+    cfg = ServeConfig(n_layers=1, vocab=1024, n_classes=64, n_slots=128)
+    cycles = 3 if tiny else 6
+    steps_per_phase = 4 if tiny else 6
+    # warm BOTH phase signatures (A and B) before measuring: steady
+    # state is "every signature has been seen", the paper's oscillation
+    warmup = 2 if tiny else 4
+
+    rows, record = [], {
+        "config": {"tiny": tiny, "cycles": cycles,
+                   "steps_per_phase": steps_per_phase, "warmup": warmup},
+        "workloads": {},
+    }
+    for wl in WORKLOADS:
+        res = {}
+        for label, sig in (("signature", True), ("version_keyed", False)):
+            rt = _build_runtime(cfg, signature_cache=sig)
+            try:
+                res[label] = _drive(rt, cfg, wl, cycles,
+                                    steps_per_phase, warmup)
+            finally:
+                rt.close()
+        speedup = (res["version_keyed"]["cycle_s_median"]
+                   / max(res["signature"]["cycle_s_median"], 1e-9))
+        record["workloads"][wl] = {**res, "speedup": speedup}
+        for label in ("signature", "version_keyed"):
+            r = res[label]
+            rows.append((
+                f"plan_churn/{wl}/{label}",
+                r["cycle_s_median"] * 1e6,
+                f"compiles_per_cycle={r['compiles_per_cycle']:.1f}"
+                f";reval={r['revalidations']}"
+                f";cache={r['cache_hits']}h/{r['cache_misses']}m"))
+        rows.append((f"plan_churn/{wl}/speedup",
+                     speedup, f"speedup={speedup:.1f}x"))
+    global _LAST
+    _LAST = record
+    return rows
+
+
+def json_record() -> dict:
+    """The machine-readable result of the last :func:`run` call —
+    written to ``BENCH_plan_churn.json`` by ``run.py`` and the CI
+    benchmark smoke job."""
+    return dict(_LAST)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke configuration (fewer/shorter cycles)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the machine-readable record here")
+    args = ap.parse_args(argv)
+    emit(run(tiny=args.tiny))
+    if args.json:
+        Path(args.json).write_text(json.dumps(json_record(), indent=2)
+                                   + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,6 +1,8 @@
 # Morpheus core: dynamic recompilation of JAX data planes.
 from .ctx import DataPlaneCtx
 from .engine import EngineConfig, MorpheusEngine
+from .execcache import CacheStats, ExecutableCache, \
+    enable_persistent_xla_cache
 from .instrument import AdaptiveController, SketchConfig
 from .passes import PassRegistry, SpecializationPass, default_registry
 from .runtime import MorpheusRuntime, RuntimeStats

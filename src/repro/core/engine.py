@@ -17,6 +17,7 @@ sharding specs (a PlaneState of Shardings is a valid jit prefix).
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Tuple
@@ -52,6 +53,19 @@ class EngineConfig:
     donate: bool = True                      # donate PlaneState buffers
     mesh: Optional[Any] = None               # jax Mesh => sharded serving
     instr_axes: Tuple[str, ...] = ("data",)  # sketch/batch mesh axes
+    # --- executable cache (repro.core.execcache) ---
+    signature_cache: bool = True   # key executables by plan.signature
+                                   # (False: by plan.key, i.e. the
+                                   # version-keyed baseline — every plan
+                                   # churn recompiles; benchmarks only)
+    exec_cache_capacity: int = 64  # LRU entries when the runtime builds
+                                   # its own ExecutableCache
+    cache_ns: Optional[str] = None  # namespace inside a *shared* cache;
+                                    # same ns + same cache => runtimes
+                                    # share executables (requires equal
+                                    # step fn / schemas / shapes)
+    xla_cache_dir: Optional[str] = None  # persistent XLA compile cache:
+                                         # warm restarts skip t2
 
     @property
     def n_instr_shards(self) -> Optional[int]:
@@ -77,6 +91,23 @@ class MorpheusEngine:
         self.sites = []
         self.mutability: Dict[str, str] = {}
         self._analyzed = False
+        # t2 counters: every trace+lower / XLA compile this engine runs.
+        # The zero-retrace tests assert these stay flat across
+        # revalidated or cache-hit recompile cycles.  Incremented under
+        # a lock: the runtime compiles the specialized + instrumented
+        # twins on concurrent threads, and a torn += would drop counts.
+        self.lower_count = 0
+        self.compile_count = 0
+        self._count_lock = threading.Lock()
+        if self.cfg.xla_cache_dir is not None:
+            from .execcache import enable_persistent_xla_cache
+            if not enable_persistent_xla_cache(self.cfg.xla_cache_dir):
+                import warnings
+                warnings.warn(
+                    f"xla_cache_dir={self.cfg.xla_cache_dir!r} requested "
+                    f"but this jax build lacks the persistent "
+                    f"compilation-cache knobs — warm restarts will pay "
+                    f"full t2", stacklevel=2)
 
     # ---- §4.1 static code analysis ---------------------------------------
     def analyze(self, params, example_batch) -> Dict[str, Any]:
@@ -124,12 +155,19 @@ class MorpheusEngine:
                 out.append(s.site_id)
         return out
 
-    def init_instr_state(self):
+    def init_instr_state(self, sites=None):
         """Fresh sketch state per instrumented site — sharded (one slice
-        per device along ``cfg.instr_axes``) when the engine has a mesh."""
+        per device along ``cfg.instr_axes``) when the engine has a mesh.
+        ``sites`` pins the site set explicitly: callers that snapshot
+        the instrumented-site tuple once per recompile cycle pass it
+        here so the built structure cannot drift from the snapshot if a
+        concurrent control update moves ``n_valid`` across the inline
+        threshold mid-cycle."""
+        if sites is None:
+            sites = self.instrumented_sites()
         n = self.cfg.n_instr_shards
         return {sid: instrument.init_site_state(self.cfg.sketch, n)
-                for sid in self.instrumented_sites()}
+                for sid in sites}
 
     def init_guards(self):
         """Zeroed in-graph guards, one per RW table (§4.3.6): nonzero
@@ -246,23 +284,16 @@ class MorpheusEngine:
         # pinned to its input placement so donation can reuse buffers.
         return (params_sh, state_sh, batch_sh), (None, state_sh)
 
-    def compile(self, plan: SpecializationPlan, params, state: PlaneState,
-                batch, *, donate: Optional[bool] = None,
-                in_shardings=None, out_shardings=None
-                ) -> Tuple[Callable, float]:
-        """AOT-compile ``plan`` into an executable; returns
-        ``(executable, t2_seconds)`` where the executable is called as
-        ``out, new_state = executable(params, state, batch)``.
-
-        The PlaneState argument is donated by default (``cfg.donate``):
-        the executable may write the new state into the old state's
-        buffers, so treat the passed-in state as consumed.
-        ``in_shardings``/``out_shardings`` pass through to ``jax.jit``
-        (prefix pytrees over ``(params, state, batch)`` / the
-        ``(out, state)`` result) for per-leaf placement; when the engine
-        has a mesh and neither is given, :meth:`default_shardings`
-        supplies the sharded-serving placement."""
-        t0 = time.time()
+    def lower(self, plan: SpecializationPlan, params, state: PlaneState,
+              batch, *, donate: Optional[bool] = None,
+              in_shardings=None, out_shardings=None):
+        """Stage 1 of ``t2``: build the step function for ``plan`` and
+        trace + lower it against the concrete ``(params, state, batch)``
+        avals.  Returns the jax ``Lowered`` object; stage 2
+        (``.compile()``, the XLA invocation) is separate so callers can
+        overlap several compiles — XLA compilation releases the GIL, so
+        the runtime XLA-compiles the specialized and instrumented twins
+        concurrently on the recompile thread."""
         step = self.make_step_fn(plan)
         donate = self.cfg.donate if donate is None else donate
         if (self.cfg.mesh is not None and in_shardings is None
@@ -278,5 +309,32 @@ class MorpheusEngine:
             kw["out_shardings"] = out_shardings
         jitted = jax.jit(step, **kw)
         lowered = jitted.lower(params, state, batch)
+        with self._count_lock:
+            self.lower_count += 1
+        return lowered
+
+    def compile(self, plan: SpecializationPlan, params, state: PlaneState,
+                batch, *, donate: Optional[bool] = None,
+                in_shardings=None, out_shardings=None
+                ) -> Tuple[Callable, float]:
+        """AOT-compile ``plan`` into an executable; returns
+        ``(executable, t2_seconds)`` where the executable is called as
+        ``out, new_state = executable(params, state, batch)``.
+
+        Both ``t2`` stages back to back: :meth:`lower` (trace + lower),
+        then the XLA compile.  The PlaneState argument is donated by
+        default (``cfg.donate``): the executable may write the new state
+        into the old state's buffers, so treat the passed-in state as
+        consumed.  ``in_shardings``/``out_shardings`` pass through to
+        ``jax.jit`` (prefix pytrees over ``(params, state, batch)`` / the
+        ``(out, state)`` result) for per-leaf placement; when the engine
+        has a mesh and neither is given, :meth:`default_shardings`
+        supplies the sharded-serving placement."""
+        t0 = time.time()
+        lowered = self.lower(plan, params, state, batch, donate=donate,
+                             in_shardings=in_shardings,
+                             out_shardings=out_shardings)
         compiled = lowered.compile()
+        with self._count_lock:
+            self.compile_count += 1
         return compiled, time.time() - t0

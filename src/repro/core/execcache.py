@@ -1,0 +1,183 @@
+"""Signature-keyed executable cache — amortizing t2 across plan churn.
+
+Table 3 of the paper splits the Morpheus cycle into ``t1`` (planning)
+and ``t2`` (codegen); ``t2`` dominates.  Keying compiled executables by
+the plan's full ``key`` (which includes the TableSet version) means a
+control-plane bump or an oscillating hot set (A -> B -> A, the paper's
+traffic-dynamics workload) re-pays ``t2`` for code that is behaviorally
+identical to an executable already in hand.
+
+:class:`ExecutableCache` fixes that: an LRU map from
+``(namespace, plan.signature, batch structure/shapes, donate)`` to the
+compiled executable.  The signature carries exactly the trace-time
+constants (sites + flags + instrumented — no version), so every plan
+that traces to the same jaxpr shares one entry.  One cache instance can
+back several consumers:
+
+  * the runtime's *specialized* executable,
+  * its *instrumented* twin (``instrumented`` is part of the signature),
+  * the non-donating ``run_generic`` oracle (``donate`` is part of the
+    key), and
+  * — the multi-dataplane seam — several :class:`MorpheusRuntime`\\ s
+    passed the same cache instance.  Each runtime gets its own
+    ``namespace`` by default; set ``EngineConfig.cache_ns`` to the same
+    string on runtimes with identical step functions, table schemas and
+    params/batch shapes to actually share executables between them.
+
+The cache is thread-safe.  Concurrent ``get``/``put`` on the *same* key
+may compile twice (last write wins — executables are immutable, so this
+is waste, not corruption); per-key in-flight deduplication is left to
+the caller, which in the runtime is the one-recompile-at-a-time rule.
+
+:func:`enable_persistent_xla_cache` is the second layer: pointing JAX's
+persistent compilation cache at a directory makes warm *restarts* skip
+``t2`` for every executable this process (or a previous one) already
+built — wired through ``EngineConfig.xla_cache_dir`` and
+``launch/serve.py --xla-cache-dir``.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Any, Hashable, Optional
+
+import jax
+
+
+@dataclass
+class CacheStats:
+    """Host-side counters of one :class:`ExecutableCache`."""
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    inserts: int = 0
+
+
+def batch_key(batch) -> Hashable:
+    """Hashable identity of a batch's *structure*: treedef plus per-leaf
+    shape/dtype.  Executables are AOT-compiled against concrete avals,
+    so two batches with equal ``batch_key`` run the same executable."""
+    leaves, treedef = jax.tree_util.tree_flatten(batch)
+    return (treedef,
+            tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
+
+
+class ExecutableCache:
+    """Bounded LRU cache of compiled executables.
+
+    Keys are built by the caller (see :meth:`make_key`); values are the
+    opaque compiled executables.  ``capacity`` bounds the entry count —
+    compiled programs pin device memory, so unbounded growth under plan
+    churn is a leak.  Eviction only drops the cache's reference: an
+    evicted executable that is still the runtime's active one keeps
+    running (the runtime holds its own reference) and is simply
+    recompiled on its next miss.
+    """
+
+    def __init__(self, capacity: int = 64):
+        assert capacity >= 1
+        self.capacity = capacity
+        self.stats = CacheStats()
+        self._lock = threading.Lock()
+        self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
+
+    @staticmethod
+    def make_key(ns: Hashable, signature: Hashable, bkey: Hashable,
+                 donate: bool = True) -> Hashable:
+        """The cache key anatomy: ``(namespace, plan signature, batch
+        structure/shapes, donate)``."""
+        return (ns, signature, bkey, donate)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def __contains__(self, key: Hashable) -> bool:
+        with self._lock:
+            return key in self._entries
+
+    def get(self, key: Hashable) -> Optional[Any]:
+        """The cached executable for ``key`` (marked most-recently-used),
+        or None.  Counts a hit or a miss."""
+        with self._lock:
+            exe = self._entries.get(key)
+            if exe is None:
+                self.stats.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.stats.hits += 1
+            return exe
+
+    def peek(self, key: Hashable) -> Optional[Any]:
+        """Like :meth:`get` but with no stats / recency side effects —
+        for introspection and tests."""
+        with self._lock:
+            return self._entries.get(key)
+
+    def put(self, key: Hashable, exe: Any) -> None:
+        """Insert ``exe`` under ``key``, evicting least-recently-used
+        entries beyond ``capacity``."""
+        with self._lock:
+            self._entries[key] = exe
+            self._entries.move_to_end(key)
+            self.stats.inserts += 1
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.stats.evictions += 1
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+
+
+_ACTIVE_XLA_CACHE_DIR: Optional[str] = None
+
+
+def enable_persistent_xla_cache(path: str) -> bool:
+    """Point JAX's persistent compilation cache at ``path`` so warm
+    restarts skip ``t2`` for already-built executables.  Thresholds are
+    dropped to zero — data-plane executables are small but recompiled
+    continuously, exactly the workload the defaults exclude.  The cache
+    object is latched on the first compile of the process, so it is
+    explicitly reset after the config change; the engine can therefore
+    enable it mid-process (jax ops already run).
+
+    The setting is PROCESS-GLOBAL (it is jax config, not per-engine):
+    re-enabling the same directory is a no-op, and pointing a second
+    engine at a *different* directory redirects every engine in the
+    process (a warning says so).  Returns False (and changes nothing) on
+    jax builds without the knobs."""
+    global _ACTIVE_XLA_CACHE_DIR
+    path = str(path)
+    if _ACTIVE_XLA_CACHE_DIR == path:
+        return True                      # already active: don't re-latch
+    knobs = (("jax_compilation_cache_dir", path),
+             ("jax_persistent_cache_min_entry_size_bytes", -1),
+             ("jax_persistent_cache_min_compile_time_secs", 0))
+    prev = {}
+    try:
+        for name, _ in knobs:            # probe BEFORE mutating any
+            prev[name] = getattr(jax.config, name)
+        for name, value in knobs:
+            jax.config.update(name, value)
+        from jax.experimental.compilation_cache import compilation_cache
+        compilation_cache.reset_cache()
+    except (AttributeError, ImportError, ValueError):
+        # honor the "changes nothing on failure" contract: restore every
+        # knob that was touched — caching must not be left half-enabled
+        for name, value in prev.items():
+            try:
+                jax.config.update(name, value)
+            except (AttributeError, ValueError):
+                pass
+        return False
+    if _ACTIVE_XLA_CACHE_DIR is not None:
+        import warnings
+        warnings.warn(
+            f"persistent XLA cache redirected from "
+            f"{_ACTIVE_XLA_CACHE_DIR!r} to {path!r} — the setting is "
+            f"process-global and now applies to every engine",
+            stacklevel=2)
+    _ACTIVE_XLA_CACHE_DIR = path
+    return True

@@ -39,9 +39,22 @@ there) and every mesh code path degrades to the classic behavior.
 copy-on-write handoff — control-plane updates never wait behind a
 snapshot, and a blocking ``recompile`` no longer charges the copy to its
 caller's thread.
+
+``t2`` is paid only for genuinely new code: executables live in a
+signature-keyed :class:`~repro.core.execcache.ExecutableCache` (plan
+*signature* excludes the table version, so a control-plane bump or an
+oscillating hot set A -> B -> A reuses executables instead of
+re-tracing), a recompile cycle whose planned signature equals the active
+one just *revalidates* — restamps the plan's version under the lock,
+zero trace/compile/swap — and when the specialized + instrumented twins
+do need compiling, their XLA compiles run concurrently on the recompile
+thread.  Pass one cache instance to several runtimes to share it
+(multi-dataplane serving).
 """
 from __future__ import annotations
 
+import dataclasses
+import itertools
 import threading
 import time
 import weakref
@@ -52,6 +65,7 @@ import jax
 import numpy as np
 
 from .engine import EngineConfig, MorpheusEngine
+from .execcache import ExecutableCache, batch_key
 from .instrument import AdaptiveController
 from . import instrument
 from .snapshot import TableSnapshotWorker, VersionedSnapshot
@@ -68,12 +82,18 @@ class RuntimeStats:
     instr_steps: int = 0
     recompiles: int = 0
     swaps: int = 0
+    revalidations: int = 0        # cycles that only restamped the version
+    cache_hits: int = 0           # executables served from the exec cache
+    cache_misses: int = 0         # executables that had to be compiled
     queued_updates: int = 0
     t1_history: List[float] = field(default_factory=list)
     t2_history: List[float] = field(default_factory=list)
     swap_history: List[float] = field(default_factory=list)
     pass_stats: Dict[str, int] = field(default_factory=dict)
     snapshot_versions: List[int] = field(default_factory=list)
+
+
+_NS_COUNTER = itertools.count()
 
 
 class MorpheusRuntime:
@@ -95,7 +115,8 @@ class MorpheusRuntime:
 
     def __init__(self, user_step: Callable, tables: TableSet, params,
                  example_batch, cfg: Optional[EngineConfig] = None,
-                 enable: bool = True):
+                 enable: bool = True,
+                 exec_cache: Optional[ExecutableCache] = None):
         self.engine = MorpheusEngine(user_step, tables, cfg)
         self.tables = tables
         self.enable = enable
@@ -107,8 +128,23 @@ class MorpheusRuntime:
         self.params = self._place_params(params)
         self.state: PlaneState = self._place_state(self.engine.init_state())
 
-        self._execs: Dict[Any, Callable] = {}
+        # every executable this runtime holds — specialized, instrumented
+        # twin, generic, run_generic oracles — lives in one LRU
+        # ExecutableCache keyed by plan *signature* (no version).  Pass
+        # ``exec_cache`` to share the cache across runtimes
+        # (multi-dataplane serving); each runtime namespaces its keys
+        # unless EngineConfig.cache_ns opts into full sharing.
+        self.exec_cache = (exec_cache if exec_cache is not None
+                           else ExecutableCache(
+                               self.engine.cfg.exec_cache_capacity))
+        # process-unique default namespace: id(self) can be recycled by
+        # the allocator after a runtime dies, which would serve a dead
+        # runtime's executables out of a shared cache
+        self._cache_ns = (self.engine.cfg.cache_ns
+                         if self.engine.cfg.cache_ns is not None
+                         else f"rt-{next(_NS_COUNTER)}")
         self._lock = threading.Lock()
+        self._recompile_mutex = threading.Lock()
         self._compiling = False
         self._queued: List[tuple] = []
         self._snapshot_worker: Optional[TableSnapshotWorker] = None
@@ -117,17 +153,26 @@ class MorpheusRuntime:
         self._batch_sh_cache: Dict[Any, Any] = {}
         self.last_snapshot: Optional[VersionedSnapshot] = None
 
-        # generic + generic-instrumented executables (always available)
+        # generic + generic-instrumented executables (always available;
+        # the runtime holds direct references so cache eviction can
+        # never take the deopt target away)
         self.generic_plan = self.engine.generic_plan()
+        self._active_isites = self._isites()
         example_batch = self._place_batch(example_batch)
-        self.generic_exec = self._get_exec(self.generic_plan, example_batch)
-        self.generic_instr_exec = self._get_exec(
-            self.engine.generic_plan(instrumented=True), example_batch)
-        self.plan = self.generic_plan
-        self.exec = self.generic_exec
-        self.instr_exec = self.generic_instr_exec
+        gen_exec, gen_instr = self._get_many(
+            [self.generic_plan,
+             self._instr_twin(self.generic_plan, self._active_isites)],
+            example_batch, self._active_isites)
+        self.generic_instr_exec = gen_instr
+        # the active (plan, exec, instr_exec, generic_exec) tuple: ONE
+        # attribute, so dispatch reads a consistent set with a single
+        # reference load while a background recompile swaps it — the
+        # generic deopt target is part of the tuple because a topology-
+        # changing swap replaces it together with the state structure
+        self._active: Tuple[SpecializationPlan, Callable, Callable,
+                            Callable] = (
+            self.generic_plan, gen_exec, gen_instr, gen_exec)
         self._example_batch = example_batch
-        self._generic_oracles: Dict[Any, Callable] = {}
 
         # warm the plan-time psum merge now, while nothing is serving:
         # its one-time jit compile must never happen under the runtime
@@ -163,8 +208,7 @@ class MorpheusRuntime:
         tree_map of fresh NamedShardings."""
         if self.mesh is None:
             return batch
-        leaves, treedef = jax.tree_util.tree_flatten(batch)
-        key = (treedef, tuple(tuple(l.shape) for l in leaves))
+        key = batch_key(batch)
         sh = self._batch_sh_cache.get(key)
         if sh is None:
             from ..distributed.sharding import plane_batch_shardings
@@ -173,15 +217,129 @@ class MorpheusRuntime:
             self._batch_sh_cache[key] = sh
         return jax.device_put(batch, sh)
 
-    # ------------------------------------------------------------------
-    def _get_exec(self, plan: SpecializationPlan, batch) -> Callable:
-        key = plan.key
-        if key not in self._execs:
-            compiled, t2 = self.engine.compile(plan, self.params,
-                                               self.state, batch)
-            self.stats.t2_history.append(t2)
-            self._execs[key] = compiled
-        return self._execs[key]
+    # ---- executable cache --------------------------------------------
+    @property
+    def plan(self) -> SpecializationPlan:
+        """The active plan (read from the atomic ``_active`` tuple)."""
+        return self._active[0]
+
+    @property
+    def exec(self) -> Callable:
+        """The active specialized executable."""
+        return self._active[1]
+
+    @property
+    def instr_exec(self) -> Callable:
+        """The active instrumented twin."""
+        return self._active[2]
+
+    @property
+    def generic_exec(self) -> Callable:
+        """The active generic (deopt target) executable — swapped with
+        the rest of the tuple when the instr topology changes."""
+        return self._active[3]
+
+    def _instr_twin(self, plan: SpecializationPlan,
+                    isites: Tuple[str, ...]) -> SpecializationPlan:
+        """The instrumented twin of ``plan`` — ``plan`` itself when no
+        site is instrumented (``isites``, the caller's once-per-cycle
+        snapshot): with nothing to record, the twin traces to identical
+        code, so one executable serves both dispatch roles."""
+        if plan.instrumented or not isites:
+            return plan
+        return dataclasses.replace(plan, instrumented=True,
+                                   label=plan.label + "+instr")
+
+    def _isites(self) -> Tuple[str, ...]:
+        """Canonical identity of a *fresh* sketch window's structure:
+        the sorted instrumented site ids.  Executables are AOT-compiled
+        against a concrete PlaneState treedef, and ``state.instr``'s
+        keys are the one structural component the control plane can
+        change (e.g. ``n_valid`` crossing the inline threshold flips a
+        site in or out of instrumentation) — so this tuple is part of
+        every cache key and of the revalidation condition."""
+        return tuple(sorted(self.engine.instrumented_sites()))
+
+    def _exec_key(self, plan: SpecializationPlan, batch,
+                  donate: bool, instr_struct: Tuple[str, ...]):
+        """Cache key for ``plan`` × ``batch`` structure × the instr
+        structure the executable was lowered against: the plan's
+        *signature* (version-free — behaviorally identical plans share
+        one executable), or its full version-stamped ``key`` when
+        ``EngineConfig.signature_cache`` is off (the version-keyed
+        baseline benchmarks measure against).  ``donate=False`` is the
+        non-donating oracle twin."""
+        pkey = (plan.signature if self.engine.cfg.signature_cache
+                else plan.key)
+        return ExecutableCache.make_key(self._cache_ns,
+                                        (pkey, instr_struct),
+                                        batch_key(batch), donate)
+
+    def _get_oracle(self, batch) -> Tuple[Callable, Tuple[str, ...]]:
+        """Fetch (or compile) the non-donating ``run_generic`` oracle
+        for the LIVE state structure, returning ``(exe, instr_struct)``.
+        Reads ``self.state`` ONCE so the cache key and the lowering
+        avals describe the same object even under a concurrent swap;
+        kept out of the serving cache counters and the ``t2`` history
+        (an oracle compile is not part of a Morpheus cycle)."""
+        state = self.state
+        instr_struct = tuple(sorted(state.instr.keys()))
+        key = self._exec_key(self.generic_plan, batch, False,
+                             instr_struct)
+        exe = self.exec_cache.get(key)
+        if exe is None:
+            exe = self._compile_into_cache(
+                [(self.generic_plan, False)], batch, state=state,
+                instr_struct=instr_struct, serving=False)[0]
+        return exe, instr_struct
+
+    def _compile_into_cache(self, plans: List[Tuple[SpecializationPlan,
+                                                    bool]],
+                            batch, *, state: PlaneState,
+                            instr_struct: Tuple[str, ...],
+                            serving: bool = True) -> List[Callable]:
+        """Compile every ``(plan, donate)`` pair against ``state``'s
+        avals and insert it into the cache.  Two or more pairs compile
+        concurrently — one thread per executable; XLA compilation
+        releases the GIL, so the specialized and instrumented twins' t2
+        overlaps on the recompile path.  ``serving=False`` (the oracle)
+        keeps RuntimeStats' t2 history and cache counters untouched —
+        they describe the Morpheus cycle, not oracle traffic (the
+        cache's own ``stats`` always count)."""
+        results: List[Any] = [None] * len(plans)
+
+        def compile_one(i: int, plan: SpecializationPlan, donate: bool):
+            try:
+                results[i] = ("ok", self.engine.compile(
+                    plan, self.params, state, batch, donate=donate))
+            except BaseException as e:          # re-raised on the caller
+                results[i] = ("err", e)
+
+        if len(plans) == 1:
+            compile_one(0, *plans[0])
+        else:
+            threads = [threading.Thread(
+                target=compile_one, args=(i, plan, donate),
+                name=f"morpheus-compile-{i}", daemon=True)
+                for i, (plan, donate) in enumerate(plans)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+
+        out = []
+        for (plan, donate), (status, payload) in zip(plans, results):
+            if status == "err":
+                raise payload
+            compiled, t2 = payload
+            if serving:
+                self.stats.t2_history.append(t2)
+                self.stats.cache_misses += 1
+            self.exec_cache.put(
+                self._exec_key(plan, batch, donate, instr_struct),
+                compiled)
+            out.append(compiled)
+        return out
 
     # ---- the data plane entry point ----------------------------------
     def step(self, batch):
@@ -190,41 +348,49 @@ class MorpheusRuntime:
         guard trips, the instrumented twin on sampled steps, else the
         specialized executable."""
         self.stats.steps += 1
-        # program-level guard: ONE host compare covers every RO table
-        if self.tables.version != self.plan.version:
-            exec_ = self.generic_exec
-            self.stats.deopt_steps += 1
-        elif self.enable and self.controller.should_sample(self.stats.steps):
-            exec_ = self.instr_exec
-            self.stats.instr_steps += 1
-        else:
-            exec_ = self.exec
-
         batch = self._place_batch(batch)
-        # execute + commit under the lock: the executable donates the
-        # state's buffers, so nobody may read or replace self.state
-        # between dispatch and the commit of the fresh state.
+        # dispatch + execute + commit in ONE critical section: the
+        # recompile thread replaces the (plan, exec, instr_exec,
+        # generic_exec) tuple AND resets self.state under this lock, so
+        # reading both inside it is what guarantees the executable runs
+        # against a state whose structure it was compiled for — and that
+        # nobody reads or replaces self.state between dispatch and the
+        # commit of the fresh state (the executable donates its buffers).
         with self._lock:
+            plan, spec_exec, instr_exec, generic_exec = self._active
+            # program-level guard: ONE host compare covers every RO table
+            if self.tables.version != plan.version:
+                exec_ = generic_exec
+                self.stats.deopt_steps += 1
+            elif (self.enable
+                  and self.controller.should_sample(self.stats.steps)):
+                exec_ = instr_exec
+                self.stats.instr_steps += 1
+            else:
+                exec_ = spec_exec
             out, self.state = exec_(self.params, self.state, batch)
         return out
 
     def run_generic(self, batch):
         """Replay ``batch`` through the generic plan WITHOUT committing
         state — the reference-semantics oracle.  Uses a non-donating
-        twin of the generic executable (compiled per batch shape) so the
-        live state is neither consumed nor copied."""
+        twin of the generic executable (cached per batch structure in
+        the shared ExecutableCache, ``donate=False`` keyed) so the live
+        state is neither consumed nor copied.  The oracle is compiled
+        outside the lock (compiles must never stall serving), so a
+        racing topology-changing swap can invalidate it between fetch
+        and call — the structure is rechecked under the lock and the
+        fetch retried."""
         batch = self._place_batch(batch)
-        leaves, treedef = jax.tree_util.tree_flatten(batch)
-        key = (treedef, tuple((tuple(l.shape), str(l.dtype))
-                              for l in leaves))
-        if key not in self._generic_oracles:
-            self._generic_oracles[key], _ = self.engine.compile(
-                self.generic_plan, self.params, self.state, batch,
-                donate=False)
-        with self._lock:
-            out, _ = self._generic_oracles[key](self.params, self.state,
-                                                batch)
-        return out
+        for _ in range(4):
+            oracle, instr_struct = self._get_oracle(batch)
+            with self._lock:
+                if tuple(sorted(self.state.instr.keys())) == instr_struct:
+                    out, _ = oracle(self.params, self.state, batch)
+                    return out
+        raise RuntimeError(
+            "run_generic: the state structure kept changing under "
+            "concurrent recompiles; retry when the control plane settles")
 
     # ---- instrumentation readout -------------------------------------
     def _merge_instr_on_device(self, instr):
@@ -328,7 +494,53 @@ class MorpheusRuntime:
         th.start()
         return None
 
+    def _get_many(self, plans: List[SpecializationPlan], batch,
+                  instr_struct: Tuple[str, ...]) -> List[Callable]:
+        """Fetch one serving executable per plan, deduplicating by cache
+        key and compiling ALL misses concurrently in one batch (one
+        thread per missing executable; XLA compilation releases the
+        GIL).  Used for the specialized + instrumented twins — and, on a
+        topology-changing cycle, the refreshed generic deopt targets in
+        the same batch, so the worst-case cycle's t2 still overlaps.
+        ``instr_struct`` is the caller's once-per-cycle snapshot of the
+        instrumented-site tuple: key, lowering avals, and the swap's
+        state reset all derive from the same tuple, so a concurrent
+        control update moving ``n_valid`` across the inline threshold
+        cannot mis-key an executable mid-cycle."""
+        donate = self.engine.cfg.donate
+        keys = [self._exec_key(p, batch, donate, instr_struct)
+                for p in plans]
+        found: Dict[Any, Callable] = {}
+        missing: List[Tuple[Any, SpecializationPlan]] = []
+        for k, p in zip(keys, plans):
+            if k in found or any(k == mk for mk, _ in missing):
+                continue
+            exe = self.exec_cache.get(k)
+            if exe is None:
+                missing.append((k, p))
+            else:
+                self.stats.cache_hits += 1
+                found[k] = exe
+        if missing:
+            state = self.state.replace(
+                instr=self.engine.init_instr_state(instr_struct))
+            compiled = self._compile_into_cache(
+                [(p, donate) for _, p in missing], batch, state=state,
+                instr_struct=instr_struct)
+            for (k, _), exe in zip(missing, compiled):
+                found[k] = exe
+        return [found[k] for k in keys]
+
     def _recompile_now(self) -> dict:
+        # ONE cycle at a time.  recompile(block=False) single-flights
+        # via _compiling, but a blocking recompile can race a background
+        # one — this mutex serializes whole cycles, which is what makes
+        # the pre-swap reads of _active/_active_isites below safe (the
+        # only other writer is another cycle).
+        with self._recompile_mutex:
+            return self._recompile_cycle()
+
+    def _recompile_cycle(self) -> dict:
         with self._lock:
             self._compiling = True
         try:
@@ -342,11 +554,6 @@ class MorpheusRuntime:
                 instr, snapshot=snap.tables, version=snap.version)
             self.stats.t1_history.append(t1)
             self.stats.pass_stats = pass_stats
-            instr_plan = SpecializationPlan(
-                version=plan.version, sites=plan.sites, flags=plan.flags,
-                instrumented=True, label=plan.label + "+instr")
-            new_exec = self._get_exec(plan, self._example_batch)
-            new_instr = self._get_exec(instr_plan, self._example_batch)
 
             # update hot-set stability -> adapt sampling cadence
             for sid, st in instr.items():
@@ -354,20 +561,69 @@ class MorpheusRuntime:
                                                   self.engine.cfg.sketch)
                 self.controller.observe(sid, hot)
 
+            active_plan, active_exec, active_instr, active_generic = \
+                self._active
+            isites = self._isites()
+            if (self.engine.cfg.signature_cache
+                    and plan.signature == active_plan.signature
+                    and isites == self._active_isites):
+                # REVALIDATION fast path: the freshly planned code is
+                # behaviorally identical to what is already running
+                # (same trace-time constants, same state structure) —
+                # restamp the active plan's version under the lock,
+                # zero trace/compile/swap.  Sketch window and RW guards
+                # re-arm exactly as a swap would: the plan came from a
+                # snapshot that saw every write the guards were
+                # tracking.
+                with self._lock:
+                    self._active = (
+                        dataclasses.replace(active_plan,
+                                            version=plan.version),
+                        active_exec, active_instr, active_generic)
+                    self.state = self._place_state(self.state.replace(
+                        instr=self.engine.init_instr_state(isites),
+                        guards=self.engine.init_guards()))
+                self.stats.revalidations += 1
+                self.stats.recompiles += 1
+                return {"t1": t1, "pass_stats": pass_stats,
+                        "plan": self.plan.label,
+                        "n_sites": len(plan.sites),
+                        "revalidated": True}
+
+            wanted = [plan, self._instr_twin(plan, isites)]
+            if isites != self._active_isites:
+                # the instr topology changed (a site crossed the inline
+                # threshold, instrumentation toggled): the deopt targets
+                # must match the new state structure too — compiled in
+                # the SAME concurrent batch as the twins
+                wanted += [self.generic_plan,
+                           self._instr_twin(self.generic_plan, isites)]
+            execs = self._get_many(wanted, self._example_batch, isites)
+            new_exec, new_instr = execs[0], execs[1]
+            new_generic = (execs[2] if len(execs) > 2
+                           else active_generic)
+            new_generic_instr = (execs[3] if len(execs) > 3
+                                 else self.generic_instr_exec)
+
             t0 = time.time()
             with self._lock:
-                # ATOMIC swap (the BPF_PROG_ARRAY pointer update)
-                self.plan, self.exec, self.instr_exec = \
-                    plan, new_exec, new_instr
-                # reset sketch window + revalidate RW guards for the new code
+                # ATOMIC swap (the BPF_PROG_ARRAY pointer update): one
+                # reference assignment replaces the whole tuple
+                self._active = (plan, new_exec, new_instr, new_generic)
+                self.generic_instr_exec = new_generic_instr
+                self._active_isites = isites
+                # reset sketch window + revalidate RW guards for the new
+                # code — from the SAME site snapshot the executables
+                # were keyed and lowered with
                 self.state = self._place_state(self.state.replace(
-                    instr=self.engine.init_instr_state(),
+                    instr=self.engine.init_instr_state(isites),
                     guards=self.engine.init_guards()))
             self.stats.swap_history.append(time.time() - t0)
             self.stats.recompiles += 1
             self.stats.swaps += 1
             return {"t1": t1, "pass_stats": pass_stats,
-                    "plan": plan.label, "n_sites": len(plan.sites)}
+                    "plan": plan.label, "n_sites": len(plan.sites),
+                    "revalidated": False}
         finally:
             # drain queued control updates (§4.4 replay) BEFORE clearing
             # _compiling, in FIFO order: updates arriving during the

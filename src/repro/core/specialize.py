@@ -2,9 +2,13 @@
 
 The plan is the engine's output: per call site, which implementation to
 trace.  It is HASHABLE — the runtime caches one compiled executable per
-distinct plan (the TPU analogue of Morpheus' generated machine code:
-trace-time constants specialize the jaxpr, XLA folds and DCEs, and the
-executable is swapped atomically by the dispatcher).
+distinct plan *signature* (the TPU analogue of Morpheus' generated
+machine code: trace-time constants specialize the jaxpr, XLA folds and
+DCEs, and the executable is swapped atomically by the dispatcher).
+``signature`` carries exactly the trace-time constants; ``version``
+carries plan identity for the host-side program guard and never enters
+the traced code, so behaviorally identical plans at different table
+versions share one executable (see ``repro.core.execcache``).
 """
 from __future__ import annotations
 
@@ -36,12 +40,15 @@ class SpecializationPlan:
     instrumented: bool = False
     label: str = "generic"
 
+    def __post_init__(self):
+        # site dispatch runs once per call site per trace: a dict probe,
+        # not a linear scan (quadratic on many-site planes).  Not a
+        # dataclass field — excluded from eq/hash/replace.
+        object.__setattr__(self, "_site_map", dict(self.sites))
+
     def site(self, site_id: str) -> Optional[SiteSpec]:
         """The SiteSpec planned for ``site_id`` (None = stay generic)."""
-        for sid, spec in self.sites:
-            if sid == site_id:
-                return spec
-        return None
+        return self._site_map.get(site_id)
 
     def hot_experts(self, table: Optional[str] = None
                     ) -> Optional[Tuple[int, ...]]:
@@ -55,10 +62,21 @@ class SpecializationPlan:
         return None
 
     @property
-    def key(self):
-        return (self.version, self.sites,
-                tuple(sorted((self.flags or {}).items())),
+    def signature(self):
+        """Executable identity: exactly the trace-time constants — sites
+        (with their inlined values / hot sets), pinned flags, and whether
+        this is the instrumented twin.  Deliberately excludes ``version``:
+        two plans with equal signatures trace to identical jaxprs, so one
+        compiled executable serves both.  Plan *identity* (is the active
+        plan stale?) lives in ``version`` and is checked host-side by the
+        dispatcher's program guard — never baked into the code."""
+        return (self.sites, tuple(sorted((self.flags or {}).items())),
                 self.instrumented)
+
+    @property
+    def key(self):
+        """Full plan identity: ``(version, *signature)``."""
+        return (self.version,) + self.signature
 
 
 GENERIC_PLAN = SpecializationPlan(flags={})

@@ -27,11 +27,15 @@ from ..serving import ServeConfig, build_params, build_tables, \
 
 def run_serve(steps=200, locality="high", morpheus=True,
               recompile_every=50, batch_size=8, skew_router=True,
-              quiet=False, serve_cfg=None, features=None, mesh="auto"):
+              quiet=False, serve_cfg=None, features=None, mesh="auto",
+              xla_cache_dir=None):
     """Drive the serving data plane for ``steps`` batches and return
     ``(stats, runtime)``.  ``mesh`` is "auto" (span all local devices,
     or single-device when there is only one), "none" (force
-    single-device), or a prebuilt ``jax.sharding.Mesh``."""
+    single-device), or a prebuilt ``jax.sharding.Mesh``.
+    ``xla_cache_dir`` points JAX's persistent compilation cache at a
+    directory so warm restarts skip ``t2`` for every executable a
+    previous process already built."""
     cfg = serve_cfg or ServeConfig()
     key = jax.random.PRNGKey(0)
     params = build_params(cfg, key)
@@ -55,7 +59,8 @@ def run_serve(steps=200, locality="high", morpheus=True,
         features=features or {"vision_enabled": False,
                               "track_sessions": True},
         moe_router_table="router",
-        mesh=mesh)
+        mesh=mesh,
+        xla_cache_dir=xla_cache_dir)
     rt = MorpheusRuntime(step_fn, tables, params,
                          make_request_batch(cfg, key, batch_size),
                          cfg=ecfg, enable=morpheus)
@@ -92,7 +97,10 @@ def run_serve(steps=200, locality="high", morpheus=True,
               f"devices={n_dev} "
               f"{stats['req_per_s']:.1f} req/s p50={stats['p50_ms']:.1f}ms "
               f"p99={stats['p99_ms']:.1f}ms deopt={rt.stats.deopt_steps} "
-              f"instr={rt.stats.instr_steps}", flush=True)
+              f"instr={rt.stats.instr_steps} "
+              f"reval={rt.stats.revalidations} "
+              f"exec_cache={rt.stats.cache_hits}h/"
+              f"{rt.stats.cache_misses}m", flush=True)
     return stats, rt
 
 
@@ -107,11 +115,16 @@ def main(argv=None) -> int:
     ap.add_argument("--mesh", default="auto", choices=["auto", "none"],
                     help="'auto': span all local devices; 'none': force "
                          "single-device")
+    ap.add_argument("--xla-cache-dir", default=None, metavar="DIR",
+                    help="persistent XLA compilation cache directory — "
+                         "warm restarts skip t2 for executables already "
+                         "built by a previous process")
     args = ap.parse_args(argv)
     _, rt = run_serve(steps=args.steps, locality=args.locality,
                       morpheus=not args.no_morpheus,
                       recompile_every=args.recompile_every,
-                      batch_size=args.batch_size, mesh=args.mesh)
+                      batch_size=args.batch_size, mesh=args.mesh,
+                      xla_cache_dir=args.xla_cache_dir)
     rt.close()
     return 0
 

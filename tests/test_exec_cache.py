@@ -1,0 +1,353 @@
+"""Executable cache, revalidation fast path, and churn-path dispatch.
+
+The PR-3 contract: plan *identity* (version) lives only in the host-side
+program guard; executable *identity* is the plan signature.  A recompile
+cycle whose planned signature is unchanged performs ZERO jax traces and
+ZERO XLA compiles (revalidation); a cycle whose signature is cached
+swaps without compiling; oscillating churn (A -> B -> A) compiles each
+distinct signature exactly once.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EngineConfig, ExecutableCache, MorpheusRuntime, \
+    SketchConfig, SpecializationPlan, Table, TableSet
+from repro.core.execcache import batch_key
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# ExecutableCache unit
+# ---------------------------------------------------------------------------
+
+def test_cache_lru_eviction_and_stats():
+    c = ExecutableCache(capacity=2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1          # a is now most recent
+    c.put("c", 3)                   # evicts b (LRU)
+    assert c.peek("b") is None
+    assert c.get("a") == 1 and c.get("c") == 3
+    assert c.get("b") is None
+    assert c.stats.evictions == 1
+    assert c.stats.hits == 3 and c.stats.misses == 1
+    assert len(c) == 2
+
+
+# ---------------------------------------------------------------------------
+# plan identity: signature vs key
+# ---------------------------------------------------------------------------
+
+def test_signature_excludes_version_key_includes_it():
+    p = SpecializationPlan(version=3, sites=(), flags={"f": True})
+    q = SpecializationPlan(version=9, sites=(), flags={"f": True})
+    assert p.signature == q.signature
+    assert p.key != q.key
+    assert p.key == (3,) + p.signature
+
+
+def test_site_lookup_is_dict_backed():
+    from repro.core import SiteSpec
+    sites = tuple((f"t#{i}", SiteSpec(impl="onehot")) for i in range(50))
+    p = SpecializationPlan(sites=sites)
+    assert p.site("t#17") is sites[17][1]
+    assert p.site("missing") is None
+    # survives dataclasses.replace (post_init rebuilds the map)
+    import dataclasses
+    r = dataclasses.replace(p, version=5)
+    assert r.site("t#3") is sites[3][1]
+
+
+# ---------------------------------------------------------------------------
+# runtime churn path
+# ---------------------------------------------------------------------------
+
+def _user_step(params, ctx, batch):
+    row = ctx.lookup("classes", batch["cls"], fields=("scale",))
+    x = batch["x"] * row["scale"][:, None]
+    if ctx.flag("boost", default=False):
+        x = x + 1.0
+    return x
+
+
+def _scales(n, seed=0):
+    return np.linspace(1.0, 2.0, n).astype(np.float32) + seed
+
+
+def _mk_runtime(n_valid=8, instrument=False, capacity=64, cache=None,
+                signature_cache=True, features=None):
+    tables = TableSet([Table(
+        "classes", {"scale": _scales(n_valid)}, n_valid=n_valid,
+        instrument=instrument)])
+    batch = {"cls": jnp.arange(8, dtype=jnp.int32) % min(n_valid, 8),
+             "x": jnp.ones((8, 4), jnp.float32)}
+    cfg = EngineConfig(
+        sketch=SketchConfig(sample_every=2, max_hot=4, hot_coverage=0.5),
+        features=dict(features or {}),
+        exec_cache_capacity=capacity,
+        signature_cache=signature_cache)
+    rt = MorpheusRuntime(_user_step, tables, None, batch, cfg=cfg,
+                         exec_cache=cache)
+    rt._batch = batch
+    return rt
+
+
+def _expected(rt, batch, boost=False):
+    scale = np.asarray(rt.tables["classes"].fields["scale"])
+    out = np.asarray(batch["x"]) * scale[np.asarray(batch["cls"])][:, None]
+    return out + 1.0 if boost else out
+
+
+def test_revalidation_zero_trace_zero_compile():
+    """The acceptance criterion: a recompile cycle whose plan signature
+    is unchanged performs zero jax traces and zero XLA compiles."""
+    rt = _mk_runtime()
+    try:
+        rt.recompile(block=True)                 # specialized active
+        assert rt.stats.swaps == 1
+        eng = rt.engine
+        e0, l0, c0 = rt.exec, eng.lower_count, eng.compile_count
+        rt.tables.bump_version("config-push")    # pure control churn
+        assert rt.tables.version != rt.plan.version
+        info = rt.recompile(block=True)
+        assert info["revalidated"] is True
+        assert rt.stats.revalidations == 1
+        assert (eng.lower_count, eng.compile_count) == (l0, c0)
+        assert rt.stats.swaps == 1               # no swap either
+        assert rt.exec is e0                     # same executable object
+        assert rt.plan.version == rt.tables.version   # restamped
+        d0 = rt.stats.deopt_steps
+        out = rt.step(rt._batch)                 # guard must NOT trip
+        assert rt.stats.deopt_steps == d0
+        np.testing.assert_allclose(np.asarray(out),
+                                   _expected(rt, rt._batch), rtol=1e-6)
+    finally:
+        rt.close()
+
+
+def test_oscillation_a_b_a_compiles_at_most_twice():
+    """A -> B -> A control oscillation: two distinct signatures, two XLA
+    compiles total — the third cycle swaps to the cached A executable."""
+    rt = _mk_runtime()       # no instrumented sites => twins share code
+    try:
+        eng = rt.engine
+        base = eng.compile_count
+        for i, boost in enumerate((True, False, True)):
+            rt.set_feature("boost", boost)
+            info = rt.recompile(block=True)
+            assert info["revalidated"] is False
+            out = rt.step(rt._batch)
+            np.testing.assert_allclose(
+                np.asarray(out), _expected(rt, rt._batch, boost=boost),
+                rtol=1e-6)
+            if i == 1:
+                after_b = eng.compile_count
+        assert eng.compile_count - base <= 2
+        assert eng.compile_count == after_b      # cycle 3: zero compiles
+        assert rt.stats.swaps == 3               # but it DID swap
+    finally:
+        rt.close()
+
+
+def test_lru_eviction_recompiles_correctly():
+    rt = _mk_runtime(capacity=2)
+    try:
+        eng = rt.engine
+        for seed in (1, 2, 3):                   # distinct inline values
+            rt.control_update("classes", {"scale": _scales(8, seed)})
+            rt.recompile(block=True)
+            out = rt.step(rt._batch)
+            np.testing.assert_allclose(np.asarray(out),
+                                       _expected(rt, rt._batch),
+                                       rtol=1e-6)
+        assert rt.exec_cache.stats.evictions > 0
+        # back to an evicted signature: must recompile, not crash
+        c0 = eng.compile_count
+        rt.control_update("classes", {"scale": _scales(8, 1)})
+        rt.recompile(block=True)
+        assert eng.compile_count > c0
+        out = rt.step(rt._batch)
+        np.testing.assert_allclose(np.asarray(out),
+                                   _expected(rt, rt._batch), rtol=1e-6)
+    finally:
+        rt.close()
+
+
+def test_cached_executable_still_deopts_after_racing_update():
+    """A swap served from the cache must still be covered by the program
+    guard: a control update racing in after the recompile routes traffic
+    to the generic executable (which reads the LIVE tables)."""
+    rt = _mk_runtime()
+    try:
+        rt.control_update("classes", {"scale": _scales(8, 1)})
+        rt.recompile(block=True)                 # plan A (compiled)
+        rt.control_update("classes", {"scale": _scales(8, 2)})
+        rt.recompile(block=True)                 # plan B (compiled)
+        c0 = rt.engine.compile_count
+        rt.control_update("classes", {"scale": _scales(8, 1)})
+        rt.recompile(block=True)                 # plan A again: cache hit
+        assert rt.engine.compile_count == c0
+        assert rt.stats.cache_hits > 0
+        # racing update AFTER the swap — no recompile before the step
+        rt.control_update("classes", {"scale": _scales(8, 7)})
+        d0 = rt.stats.deopt_steps
+        out = rt.step(rt._batch)
+        assert rt.stats.deopt_steps == d0 + 1    # guard tripped
+        np.testing.assert_allclose(np.asarray(out),
+                                   _expected(rt, rt._batch), rtol=1e-6)
+    finally:
+        rt.close()
+
+
+def test_instrumented_twins_compiled_distinct_and_concurrently():
+    """With instrumented sites the specialized executable and its twin
+    are distinct cache entries, compiled in one recompile cycle."""
+    rt = _mk_runtime(n_valid=40, instrument=True)
+    try:
+        assert rt.engine.instrumented_sites()
+        assert rt.generic_instr_exec is not rt.generic_exec
+        for i in range(4):
+            rt.step(rt._batch)
+        c0 = rt.engine.compile_count
+        rt.control_update("classes", {"scale": _scales(40, 1)})
+        rt.recompile(block=True)
+        assert rt.plan.label.startswith("specialized")
+        assert rt.instr_exec is not rt.exec
+        assert rt.engine.compile_count == c0 + 2       # both twins
+        # instrumented sampling keeps working after the swap
+        s0 = rt.stats.instr_steps
+        for i in range(4):
+            rt.step(rt._batch)
+        assert rt.stats.instr_steps > s0
+    finally:
+        rt.close()
+
+
+def test_dispatch_reads_one_consistent_tuple():
+    rt = _mk_runtime()
+    try:
+        plan, exe, instr_exe, generic_exe = rt._active
+        assert rt.plan is plan
+        assert rt.exec is exe
+        assert rt.instr_exec is instr_exe
+        assert rt.generic_exec is generic_exe
+        rt.recompile(block=True)
+        assert rt.plan is rt._active[0]          # swap replaced the tuple
+    finally:
+        rt.close()
+
+
+def test_run_generic_oracle_shares_the_cache():
+    rt = _mk_runtime()
+    try:
+        n0 = len(rt.exec_cache)
+        s0 = rt.stats.cache_hits + rt.stats.cache_misses
+        out1 = rt.run_generic(rt._batch)
+        assert len(rt.exec_cache) == n0 + 1      # donate=False twin added
+        h0 = rt.exec_cache.stats.hits
+        out2 = rt.run_generic(rt._batch)         # second call: cache hit
+        assert rt.exec_cache.stats.hits > h0
+        # oracle traffic stays OUT of the serving-cycle counters
+        assert rt.stats.cache_hits + rt.stats.cache_misses == s0
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2))
+        # the oracle key differs from the serving key only in donate
+        k_serve = rt._exec_key(rt.generic_plan, rt._batch, True,
+                               rt._isites())
+        k_oracle = rt._exec_key(rt.generic_plan, rt._batch, False,
+                                rt._isites())
+        assert k_serve != k_oracle
+        assert k_serve[:-1] == k_oracle[:-1]
+    finally:
+        rt.close()
+
+
+def test_shared_cache_across_runtimes():
+    """The multi-dataplane seam: two runtimes, one ExecutableCache —
+    distinct namespaces keep their executables apart by default."""
+    cache = ExecutableCache(capacity=32)
+    rt1 = _mk_runtime(cache=cache)
+    rt2 = _mk_runtime(cache=cache)
+    try:
+        assert rt1.exec_cache is cache and rt2.exec_cache is cache
+        assert rt1._cache_ns != rt2._cache_ns
+        n_generic = len(cache)                   # both generics cached
+        assert n_generic >= 2
+        rt1.recompile(block=True)
+        rt2.recompile(block=True)
+        out1, out2 = rt1.step(rt1._batch), rt2.step(rt2._batch)
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                                   rtol=1e-6)
+        assert len(cache) >= n_generic + 2       # one specialized each
+    finally:
+        rt1.close()
+        rt2.close()
+
+
+def test_version_keyed_baseline_recompiles_every_cycle():
+    """EngineConfig(signature_cache=False) reproduces the pre-cache
+    behavior the benchmark measures against: every version bump forces
+    a full recompile of behaviorally identical code."""
+    rt = _mk_runtime(signature_cache=False)
+    try:
+        rt.recompile(block=True)
+        c0 = rt.engine.compile_count
+        rt.tables.bump_version("churn")
+        info = rt.recompile(block=True)
+        assert info["revalidated"] is False
+        assert rt.engine.compile_count > c0
+        assert rt.stats.revalidations == 0
+    finally:
+        rt.close()
+
+
+def test_instr_structure_change_forces_swap_not_revalidation():
+    """A control update that flips a site in or out of instrumentation
+    (n_valid crossing max_inline) changes the PlaneState treedef while
+    leaving the plan signature unchanged — the cycle must recompile
+    against the new structure, never revalidate the old executable."""
+    def rw_step(params, ctx, batch):
+        row = ctx.lookup("sess", batch["cls"], fields=("val",))
+        ctx.update("sess", batch["cls"],
+                   {"val": row["val"] + 1.0})
+        return row["val"]
+
+    tables = TableSet([Table("sess", {"val": np.zeros(64, np.float32)},
+                             n_valid=8, instrument=True)])
+    batch = {"cls": jnp.arange(8, dtype=jnp.int32)}
+    rt = MorpheusRuntime(rw_step, tables, None, batch,
+                         cfg=EngineConfig(sketch=SketchConfig(
+                             sample_every=2, max_hot=4)))
+    try:
+        assert rt.engine.instrumented_sites() == []     # 8 <= max_inline
+        rt.recompile(block=True)
+        sig0 = rt.plan.signature
+        # grow past the inline threshold: the site becomes instrumented,
+        # the state pytree gains a sketch — but the plan stays the same
+        rt.control_update("sess", {"val": np.zeros(64, np.float32)},
+                          n_valid=40)
+        assert rt.engine.instrumented_sites() == ["sess#0"]
+        info = rt.recompile(block=True)
+        assert rt.plan.signature == sig0                # same plan...
+        assert info["revalidated"] is False             # ...new structure
+        assert "sess#0" in rt.state.instr
+        for i in range(4):                              # incl. sampled
+            out = rt.step(batch)                        # instrumented steps
+        assert np.isfinite(np.asarray(out)).all()
+        # deopt target was refreshed for the new structure too
+        rt.tables.bump_version("late-update")
+        d0 = rt.stats.deopt_steps
+        rt.step(batch)
+        assert rt.stats.deopt_steps == d0 + 1
+    finally:
+        rt.close()
+
+
+def test_batch_key_distinguishes_shapes_and_dtypes():
+    b1 = {"x": jnp.ones((8, 4))}
+    b2 = {"x": jnp.ones((4, 4))}
+    b3 = {"x": jnp.ones((8, 4), jnp.bfloat16)}
+    assert batch_key(b1) != batch_key(b2)
+    assert batch_key(b1) != batch_key(b3)
+    assert batch_key(b1) == batch_key({"x": jnp.zeros((8, 4))})
