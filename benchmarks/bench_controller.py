@@ -1,0 +1,217 @@
+"""Controller benchmark — N data planes under ONE controller vs N
+standalone runtimes (the PR-4 multi-dataplane seam).
+
+Two measurements per mode:
+
+  steady   drive every plane with stable skewed traffic through enough
+           recompile cycles for the adaptive samplers to back off and
+           disarm (instrumented twins swapped out), then measure
+           steady-state step latency.  The controller must cost nothing
+           on the serving path: shared and standalone latencies should
+           match, both with duty cycle 0.
+  churn    oscillate every plane's control plane (A/B table contents)
+           and measure aggregate recompile throughput.  The fleet opts
+           into full executable sharing (``EngineConfig.cache_ns``), so
+           each oscillation signature is XLA-compiled ONCE for N planes
+           and the controller's bounded worker pool runs the cycles
+           concurrently — standalone runtimes each compile their own
+           twins and recompile serially.
+
+``json_record()`` feeds ``BENCH_controller.json`` (written by
+``benchmarks/run.py`` and the CI smoke job).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ControllerConfig, EngineConfig, \
+    MorpheusController, MorpheusRuntime, SketchConfig, Table, TableSet
+
+from ._util import emit
+
+_LAST: dict = {}
+
+N_VALID = 48
+
+
+def _user_step(params, ctx, batch):
+    row = ctx.lookup("classes", batch["cls"], fields=("scale",))
+    return batch["x"] * row["scale"][:, None]
+
+
+def _scales(seed=0):
+    return np.linspace(1.0, 2.0, N_VALID).astype(np.float32) + seed
+
+
+def _batch(hot0: int = 0):
+    cls = np.arange(16) % N_VALID
+    cls[:12] = hot0 + np.arange(12) % 3   # skewed: hot classes
+    return {"cls": jnp.asarray(cls, jnp.int32),      # {hot0..hot0+2}
+            "x": jnp.ones((16, 4), jnp.float32)}
+
+
+def _mk_plane(controller=None, cache_ns=None, plane_id=None):
+    tables = TableSet([Table("classes", {"scale": _scales()},
+                             n_valid=N_VALID, instrument=True)])
+    cfg = EngineConfig(
+        sketch=SketchConfig(sample_every=2, max_hot=4, hot_coverage=0.5),
+        cache_ns=cache_ns)
+    return MorpheusRuntime(_user_step, tables, None, _batch(), cfg=cfg,
+                           controller=controller, plane_id=plane_id)
+
+
+def _recompile_all(rts, controller):
+    """One cycle per plane: through the controller's worker pool when
+    shared, classic blocking recompiles when standalone."""
+    if controller is not None:
+        controller.schedule_all()
+        assert controller.drain(timeout=300)
+    else:
+        for rt in rts:
+            rt.recompile(block=True)
+
+
+def _drive_to_stable(rts, controller, batch):
+    """Step + recompile until every plane's sampler has disarmed."""
+    disarm_after = rts[0].sampler.disarm_after
+    for _ in range(disarm_after + 2):
+        for rt in rts:
+            for _ in range(4):
+                jax.block_until_ready(rt.step(batch))
+        _recompile_all(rts, controller)
+
+
+def _steady_latency(rts, batch, steps=30):
+    lat = []
+    for _ in range(steps):
+        for rt in rts:
+            t0 = time.time()
+            jax.block_until_ready(rt.step(batch))
+            lat.append(time.time() - t0)
+    return float(np.median(lat))
+
+
+def _churn(rts, controller, rounds):
+    """Traffic + control churn with a FRESH planned signature every
+    round: the whole fleet's hot set shifts (new ``hot_cache`` keys) and
+    the control plane bumps, so every plane's cycle needs executables
+    nobody compiled yet.  Standalone runtimes compile them N times on
+    serial blocking cycles; the shared fleet compiles each signature
+    once-ish (later planes hit the shared cache) on the controller's
+    bounded concurrent pool.  Samplers are pinned for the phase — this
+    measures recompile throughput, not the disarm machinery.  Returns
+    (wall_s, cycles, compiles) aggregated over the fleet."""
+    for rt in rts:
+        rt.sampler.pin(2)
+    _recompile_all(rts, controller)       # reinstall the sketches
+    c0 = sum(rt.engine.compile_count for rt in rts)
+    n0 = sum(rt.stats.recompiles for rt in rts)
+    t0 = time.time()
+    for r in range(rounds):
+        batch = _batch(hot0=3 * (r + 1))  # the fleet's hot set moves...
+        for rt in rts:
+            for _ in range(4):            # ...and the sketches see it
+                jax.block_until_ready(rt.step(batch))
+        for rt in rts:
+            rt.tables.bump_version("churn")   # ...under control churn
+        _recompile_all(rts, controller)
+    wall = time.time() - t0
+    cycles = sum(rt.stats.recompiles for rt in rts) - n0
+    compiles = sum(rt.engine.compile_count for rt in rts) - c0
+    return wall, cycles, compiles
+
+
+def run(tiny: bool = False) -> list:
+    planes = 2 if tiny else 4
+    rounds = 3 if tiny else 6
+    batch = _batch()
+
+    record = {"config": {"tiny": tiny, "planes": planes,
+                         "churn_rounds": rounds},
+              "modes": {}}
+    rows = []
+    for mode in ("shared", "standalone"):
+        if mode == "shared":
+            controller = MorpheusController(ControllerConfig(workers=2))
+            rts = [_mk_plane(controller, cache_ns="bench-fleet",
+                             plane_id=f"plane-{i}")
+                   for i in range(planes)]
+        else:
+            controller = None
+            rts = [_mk_plane() for _ in range(planes)]
+        try:
+            _drive_to_stable(rts, controller, batch)
+            duty = [rt.sampler.duty_cycle() for rt in rts]
+            steady_s = _steady_latency(rts, batch)
+            wall, cycles, compiles = _churn(rts, controller, rounds)
+            res = {
+                "steady_step_us": steady_s * 1e6,
+                "duty_cycle": float(np.mean(duty)),
+                "disarmed_planes": int(sum(d == 0.0 for d in duty)),
+                "churn_wall_s": wall,
+                "churn_cycles": cycles,
+                "churn_cycles_per_s": cycles / max(wall, 1e-9),
+                "churn_compiles": compiles,
+            }
+            if controller is not None:
+                cs = controller.stats()
+                res["scheduler"] = cs.scheduler
+                res["cache_hit_rate"] = cs.cache_hit_rate
+            record["modes"][mode] = res
+            rows.append((f"controller/steady_step/{mode}",
+                         res["steady_step_us"],
+                         f"duty={res['duty_cycle']:.2f}"
+                         f";disarmed={res['disarmed_planes']}/{planes}"))
+            rows.append((f"controller/churn_cycle/{mode}",
+                         wall / max(cycles, 1) * 1e6,
+                         f"cycles_per_s={res['churn_cycles_per_s']:.1f}"
+                         f";compiles={compiles}"))
+        finally:
+            if controller is not None:
+                controller.close()
+            for rt in rts:
+                rt.close()
+    sh, st = record["modes"]["shared"], record["modes"]["standalone"]
+    record["churn_speedup"] = (st["churn_wall_s"]
+                               / max(sh["churn_wall_s"], 1e-9))
+    record["compile_ratio"] = (st["churn_compiles"]
+                               / max(sh["churn_compiles"], 1))
+    rows.append(("controller/churn_speedup", record["churn_speedup"],
+                 f"speedup={record['churn_speedup']:.1f}x"
+                 f";compile_ratio={record['compile_ratio']:.1f}x"))
+    global _LAST
+    _LAST = record
+    return rows
+
+
+def json_record() -> dict:
+    """The machine-readable result of the last :func:`run` call —
+    written to ``BENCH_controller.json`` by ``run.py`` and the CI
+    benchmark smoke job."""
+    return dict(_LAST)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke configuration (2 planes, fewer "
+                         "rounds)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the machine-readable record here")
+    args = ap.parse_args(argv)
+    emit(run(tiny=args.tiny))
+    if args.json:
+        Path(args.json).write_text(json.dumps(json_record(), indent=2)
+                                   + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

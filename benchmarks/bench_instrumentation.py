@@ -38,9 +38,7 @@ def _make(sample_every, enable=True):
     rt = MorpheusRuntime(make_serve_step(cfg), tables, params,
                          make_request_batch(cfg, jax.random.PRNGKey(0)),
                          cfg=ecfg, enable=enable)
-    rt.controller.min_every = sample_every
-    rt.controller.max_every = sample_every     # pin the cadence
-    rt.controller.sample_every = sample_every
+    rt.sampler.pin(sample_every)               # pin the cadence
     return cfg, rt
 
 

@@ -47,11 +47,11 @@ def run(steps: int = 60) -> list:
                          cfg=ecfg)
     batches = [make_request_batch(cfg, jax.random.PRNGKey(i), 8, "high")
                for i in range(steps)]
-    rt.controller.sample_every = 2
+    rt.sampler.pin(2)
     for b in batches[:16]:
         rt.step(b)
     rt.recompile(block=True)
-    rt.controller.sample_every = 10 ** 9
+    rt.sampler.pin(10 ** 9)
     for b in batches[:6]:            # warm the specialized executable
         rt.step(b)
 

@@ -54,9 +54,9 @@ def _build_runtime(cfg: ServeConfig, signature_cache: bool):
                          make_request_batch(cfg, jax.random.PRNGKey(0)),
                          cfg=ecfg)
     # pin the sampling cadence: the benchmark needs identical
-    # instrumentation per repeated phase, not an adapting controller
-    rt.controller.min_every = rt.controller.max_every = 2
-    rt.controller.sample_every = 2
+    # instrumentation per repeated phase, not an adapting (or
+    # disarming) sampler
+    rt.sampler.pin(2)
     return rt
 
 

@@ -35,9 +35,7 @@ def run(steps: int = 48) -> list:
                              make_request_batch(cfg,
                                                 jax.random.PRNGKey(0)),
                              cfg=ecfg)
-        rt.controller.min_every = every
-        rt.controller.max_every = every
-        rt.controller.sample_every = every
+        rt.sampler.pin(every)
         times = time_steps(rt.step, batches)
         times_med = np.median(times)
         # detection quality: hot-expert coverage seen by the sketch

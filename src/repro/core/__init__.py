@@ -1,9 +1,12 @@
 # Morpheus core: dynamic recompilation of JAX data planes.
+from .controller import ControllerConfig, ControllerStats, \
+    MorpheusController, PlaneSampling, RecompileScheduler, SamplingConfig
 from .ctx import DataPlaneCtx
 from .engine import EngineConfig, MorpheusEngine
 from .execcache import CacheStats, ExecutableCache, \
     enable_persistent_xla_cache
-from .instrument import AdaptiveController, SketchConfig
+from .instrument import AdaptiveController, SketchConfig, \
+    SketchDoubleBuffer
 from .passes import PassRegistry, SpecializationPass, default_registry
 from .runtime import MorpheusRuntime, RuntimeStats
 from .snapshot import TableSnapshotWorker, VersionedSnapshot

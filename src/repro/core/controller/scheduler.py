@@ -1,0 +1,158 @@
+"""Recompile scheduler — one bounded worker pool for N data planes.
+
+Before the controller split every :class:`MorpheusRuntime` spawned its
+own ad-hoc daemon thread per ``recompile(block=False)`` call: N planes
+under churn meant N unbounded compile threads fighting over cores while
+the data planes tried to serve.  :class:`RecompileScheduler` replaces
+that with one pool shared by every plane the controller drives:
+
+  * **bounded** — at most ``workers`` cycles run at once, lazily spawned
+    (a controller that only ever sees blocking recompiles starts no
+    threads);
+  * **prioritized** — when more planes are pending than workers, the
+    pool picks the plane with the largest ``staleness x traffic``
+    product (see ``MorpheusRuntime.recompile_priority``): a plane whose
+    tables drifted three versions while serving heavy traffic recompiles
+    before an idle one that drifted once;
+  * **coalesced** — submitting a plane already pending is a no-op (one
+    entry per plane), and a plane whose cycle is *running* stays
+    eligible to be re-queued so updates arriving mid-cycle get a fresh
+    cycle afterwards — but the pool never runs two cycles for the same
+    plane concurrently (the per-plane mutex in the runtime backstops
+    this for blocking callers too);
+  * **weakly referencing** — pending entries hold weakrefs, so a plane
+    dropped by its owner is skipped, never resurrected.
+
+The scheduler is duck-typed over planes: anything with
+``_recompile_now()`` and ``recompile_priority()`` schedules (tests use
+stubs).
+"""
+from __future__ import annotations
+
+import threading
+import weakref
+from typing import Any, Dict, List, Optional, Tuple
+
+
+class RecompileScheduler:
+    """Bounded, priority-ordered worker pool for recompile cycles."""
+
+    def __init__(self, workers: int = 2,
+                 name: str = "morpheus-recompile"):
+        assert workers >= 1
+        self.workers = workers
+        self._name = name
+        self._cond = threading.Condition()
+        self._pending: Dict[str, "weakref.ref"] = {}
+        self._running: set = set()
+        self._threads: List[threading.Thread] = []
+        self._stopped = False
+        # counters (under _cond)
+        self.scheduled = 0
+        self.coalesced = 0
+        self.completed = 0
+        self.failed = 0
+        self.last_error: Optional[BaseException] = None
+
+    # ---- producer side ----------------------------------------------------
+    def submit(self, plane_id: str, plane: Any) -> bool:
+        """Queue one recompile cycle for ``plane``.  Returns True when a
+        new entry was queued, False when an identical request was already
+        pending (coalesced).  Worker threads spawn lazily, capped at
+        ``workers``."""
+        with self._cond:
+            if self._stopped:
+                raise RuntimeError("recompile scheduler closed")
+            if plane_id in self._pending:
+                self._pending[plane_id] = weakref.ref(plane)
+                self.coalesced += 1
+                return False
+            self._pending[plane_id] = weakref.ref(plane)
+            self.scheduled += 1
+            if len(self._threads) < self.workers:
+                t = threading.Thread(
+                    target=self._run, daemon=True,
+                    name=f"{self._name}-{len(self._threads)}")
+                self._threads.append(t)
+                t.start()
+            self._cond.notify()
+            return True
+
+    def drain(self, timeout: float = 60.0) -> bool:
+        """Block until no cycle is pending or running (or timeout)."""
+        with self._cond:
+            return self._cond.wait_for(
+                lambda: self._stopped or (not self._pending
+                                          and not self._running),
+                timeout=timeout)
+
+    def stats(self) -> Dict[str, int]:
+        with self._cond:
+            return {"scheduled": self.scheduled,
+                    "coalesced": self.coalesced,
+                    "completed": self.completed,
+                    "failed": self.failed,
+                    "pending": len(self._pending),
+                    "running": len(self._running),
+                    "workers": len(self._threads)}
+
+    # ---- worker side ------------------------------------------------------
+    def _pick(self) -> Optional[Tuple[str, Any]]:
+        """Highest-priority pending plane not currently running; drops
+        dead weakrefs.  Called under ``_cond``."""
+        best: Optional[Tuple[str, Any]] = None
+        best_prio = None
+        for pid in list(self._pending):
+            if pid in self._running:
+                continue              # never two cycles for one plane
+            plane = self._pending[pid]()
+            if plane is None:
+                del self._pending[pid]     # owner dropped the runtime
+                continue
+            try:
+                prio = plane.recompile_priority()
+            except Exception:
+                prio = 0.0
+            if best_prio is None or prio > best_prio:
+                best, best_prio = (pid, plane), prio
+        return best
+
+    def _run(self) -> None:
+        while True:
+            with self._cond:
+                item = self._pick()
+                while not self._stopped and item is None:
+                    self._cond.wait()
+                    item = self._pick()
+                if self._stopped:
+                    return
+                pid, plane = item
+                del self._pending[pid]
+                self._running.add(pid)
+            try:
+                plane._recompile_now()
+                with self._cond:
+                    self.completed += 1
+            except BaseException as e:      # a dead plane must not kill
+                with self._cond:            # the pool
+                    self.failed += 1
+                    self.last_error = e
+            finally:
+                plane = None                # drop the strong ref
+                with self._cond:
+                    self._running.discard(pid)
+                    # the same plane may have been re-queued mid-cycle
+                    self._cond.notify_all()
+
+    def close(self) -> None:
+        """Stop the pool.  Pending cycles are dropped; the running ones
+        finish (their planes' recompile mutexes stay consistent).
+        Idempotent."""
+        with self._cond:
+            if self._stopped:
+                return
+            self._stopped = True
+            self._pending.clear()
+            self._cond.notify_all()
+        for t in self._threads:
+            t.join(timeout=30.0)

@@ -7,6 +7,13 @@
 Timing mirrors Table 3: ``t1`` = analysis + table/sketch read + pass
 planning; ``t2`` = trace + XLA compile of the specialized executable.
 
+The engine is deliberately *loop-free*: it plans and compiles when
+asked, but when/how often cycles run, which sketches are being recorded,
+and where compiles execute are all decided a layer up — by
+:class:`~repro.core.controller.MorpheusController` (sampling duty
+cycles, the bounded recompile worker pool, snapshot workers), with
+:class:`~repro.core.runtime.MorpheusRuntime` as the data-plane half.
+
 The step function's contract is::
 
     step(params, state: PlaneState, batch) -> (out, PlaneState)

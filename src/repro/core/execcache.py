@@ -24,10 +24,14 @@ back several consumers:
     string on runtimes with identical step functions, table schemas and
     params/batch shapes to actually share executables between them.
 
-The cache is thread-safe.  Concurrent ``get``/``put`` on the *same* key
-may compile twice (last write wins — executables are immutable, so this
-is waste, not corruption); per-key in-flight deduplication is left to
-the caller, which in the runtime is the one-recompile-at-a-time rule.
+The cache is thread-safe, and :meth:`ExecutableCache.get_or_compile`
+adds **per-key in-flight deduplication**: when N data planes sharing one
+cache (``EngineConfig.cache_ns``) chase the same fleet-wide config push,
+exactly one of them runs the compile for each missing key — the others
+wait for the owner's insert instead of stampeding XLA with N copies of
+the same compilation.  Raw concurrent ``get``/``put`` on the same key
+remains last-write-wins (waste, not corruption) for callers that bypass
+``get_or_compile``.
 
 :func:`enable_persistent_xla_cache` is the second layer: pointing JAX's
 persistent compilation cache at a directory makes warm *restarts* skip
@@ -47,11 +51,15 @@ import jax
 
 @dataclass
 class CacheStats:
-    """Host-side counters of one :class:`ExecutableCache`."""
+    """Host-side counters of one :class:`ExecutableCache`.
+    ``inflight_waits`` counts compile stampedes avoided: callers that
+    found another thread/plane already compiling their key and waited
+    for its insert instead of compiling again."""
     hits: int = 0
     misses: int = 0
     evictions: int = 0
     inserts: int = 0
+    inflight_waits: int = 0
 
 
 def batch_key(batch) -> Hashable:
@@ -81,6 +89,8 @@ class ExecutableCache:
         self.stats = CacheStats()
         self._lock = threading.Lock()
         self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self._inflight: dict = {}       # key -> Event of the compiling
+                                        # owner (get_or_compile)
 
     @staticmethod
     def make_key(ns: Hashable, signature: Hashable, bkey: Hashable,
@@ -109,6 +119,18 @@ class ExecutableCache:
             self.stats.hits += 1
             return exe
 
+    def probe(self, key: Hashable) -> Optional[Any]:
+        """Like :meth:`get` but counting only *hits*: a miss here is
+        provisional — callers that route misses through
+        :meth:`get_or_compile` use this for the pre-check so the same
+        miss is not counted twice."""
+        with self._lock:
+            exe = self._entries.get(key)
+            if exe is not None:
+                self._entries.move_to_end(key)
+                self.stats.hits += 1
+            return exe
+
     def peek(self, key: Hashable) -> Optional[Any]:
         """Like :meth:`get` but with no stats / recency side effects —
         for introspection and tests."""
@@ -125,6 +147,45 @@ class ExecutableCache:
             while len(self._entries) > self.capacity:
                 self._entries.popitem(last=False)
                 self.stats.evictions += 1
+
+    def get_or_compile(self, key: Hashable, compile_fn):
+        """Fetch ``key``, compiling it with in-flight deduplication on a
+        miss: the first caller to miss becomes the *owner* and runs
+        ``compile_fn`` (which must return ``(exe, aux)`` — the
+        executable plus any caller-side bookkeeping, e.g. the ``t2``
+        seconds); every concurrent caller of the same key — another
+        thread of this runtime or another data plane sharing the cache —
+        waits for the owner's insert instead of compiling the same
+        executable again.  Returns ``(exe, aux)`` for the owner and
+        ``(exe, None)`` for hits and waiters (aux None = "someone else
+        paid t2").  If the owner's compile raises, one waiter claims
+        ownership and retries, so a failure never wedges the key."""
+        while True:
+            with self._lock:
+                exe = self._entries.get(key)
+                if exe is not None:
+                    self._entries.move_to_end(key)
+                    self.stats.hits += 1
+                    return exe, None
+                ev = self._inflight.get(key)
+                if ev is None:
+                    ev = threading.Event()
+                    self._inflight[key] = ev
+                    self.stats.misses += 1
+                    owner = True
+                else:
+                    self.stats.inflight_waits += 1
+                    owner = False
+            if owner:
+                try:
+                    exe, aux = compile_fn()
+                    self.put(key, exe)
+                    return exe, aux
+                finally:
+                    with self._lock:
+                        self._inflight.pop(key, None)
+                    ev.set()
+            ev.wait()
 
     def clear(self) -> None:
         with self._lock:

@@ -228,10 +228,65 @@ def hot_keys(state: Dict[str, jax.Array], cfg: SketchConfig
     return top.astype(np.int32), min(coverage, 1.0), total
 
 
+class SketchDoubleBuffer:
+    """Front/back buffer pair for lock-free instrumentation readout.
+
+    The *front* buffer is the live sketch state inside the (donated)
+    :class:`~repro.core.state.PlaneState` — every sampled step's
+    executable folds keys into it in place.  Because those buffers are
+    donated, a host read racing the next step would observe deleted
+    arrays; the seed runtime therefore held the runtime lock across the
+    whole device->host copy, stalling every in-flight step behind ``t1``.
+
+    The *back* buffer fixes that: after each instrumented step (and
+    after every sketch-window reset at swap time) the runtime
+    :meth:`publish`\\ es the freshly recorded front — a tiny jitted
+    device-side copy, dispatch-only under the lock.  The copies are jit
+    *outputs* of a non-donating function, so they live outside the
+    donated pytree and are never consumed by any executable:
+    :meth:`read` is a plain atomic reference load that any thread may
+    follow with a leisurely device->host transfer, **without the runtime
+    lock**.  Sketches only advance on sampled steps, so the back buffer
+    is not merely fresh-enough — it is exactly the current sketch
+    contents.
+
+    ``seq`` counts publishes (tests assert the swap happened)."""
+
+    def __init__(self):
+        self._back: Dict[str, Dict[str, jax.Array]] = {}
+        self.seq = 0
+        self._copy_fn = None
+
+    def publish(self, instr: Dict[str, Dict[str, jax.Array]]) -> None:
+        """Copy ``instr`` on device and swap it in as the back buffer.
+        The source arrays must still be live at dispatch time (call with
+        the runtime lock held, or with freshly built arrays) — the
+        copy's execution is then ordered before any later donation by
+        the device runtime's usage tracking."""
+        if not instr:
+            self._back = {}
+        else:
+            if self._copy_fn is None:
+                self._copy_fn = jax.jit(
+                    lambda tree: jax.tree.map(jnp.copy, tree))
+            self._back = self._copy_fn(instr)
+        self.seq += 1
+
+    def read(self) -> Dict[str, Dict[str, jax.Array]]:
+        """The latest published back buffer — quiesced device arrays
+        safe to transfer host-side from any thread, no lock needed."""
+        return self._back
+
+
 @dataclass
 class AdaptiveController:
     """Adjusts the sampling cadence (§6.2/Fig 9): back off when the hot
-    set is stable, speed up on churn."""
+    set is stable, speed up on churn.
+
+    Kept as the minimal single-plane reference; the runtime now samples
+    via :class:`repro.core.controller.sampling.PlaneSampling`, which
+    adds plan-churn-driven duty cycles and the disarm/re-arm state
+    machine."""
     cfg: SketchConfig
     min_every: int = 2
     max_every: int = 64

@@ -1,4 +1,4 @@
-"""Morpheus runtime: dispatcher, program-level guard, atomic update (§4.4).
+"""Morpheus runtime: the pure data-plane half (dispatch + atomic update).
 
 The runtime owns the executables and plays the role of the eBPF
 ``BPF_PROG_ARRAY`` swap:
@@ -7,12 +7,27 @@ The runtime owns the executables and plays the role of the eBPF
     the control plane touched any table since the active plan was built,
     traffic routes to the *generic* executable until the background
     recompile lands (deoptimization without data-plane disruption);
-  * **adaptive instrumentation**: every Nth step runs the instrumented
-    twin of the current executable (N adapted by the controller) — all
-    other steps pay zero instrumentation cost;
-  * **atomic update**: recompilation happens on a background thread;
-    control-plane updates arriving mid-compile are queued and replayed
-    after the swap; the swap itself is a Python reference assignment.
+  * **adaptive instrumentation**: sampled steps run the instrumented
+    twin of the current executable; the cadence — and whether the twin
+    is installed at all — is decided by the plane's
+    :class:`~repro.core.controller.sampling.PlaneSampling` state machine
+    on the controller;
+  * **atomic update**: recompilation happens off-thread; control-plane
+    updates arriving mid-compile are queued and replayed after the swap;
+    the swap itself is a Python reference assignment.
+
+Everything *control-loop* shaped lives in
+:class:`~repro.core.controller.MorpheusController` — the off-thread
+``t1`` snapshot workers, the shared signature-keyed
+:class:`~repro.core.execcache.ExecutableCache`, the adaptive sampling
+scheduler, and the bounded recompile worker pool that replaces the old
+per-runtime compile threads.  A runtime registers itself with a
+controller at construction; passing ``controller=None`` builds a
+*private* controller so the classic single-plane API is unchanged
+(``rt.close()`` closes it along with the runtime).  Several runtimes
+passed the same controller form one fleet: one executable cache, one
+recompile scheduler prioritizing planes by staleness x traffic, per-plane
+sampling duty cycles driven by plan churn.
 
 Device state lives in one :class:`PlaneState` pytree (``runtime.state``)
 threaded through every executable; the executables donate its buffers, so
@@ -24,32 +39,29 @@ For semantics checks use :meth:`run_generic`, a non-donating twin of the
 generic executable; when replaying a *donating* executable by hand, pass
 it ``state.copy()``.
 
+Instrumentation readout is **double-buffered**
+(:class:`~repro.core.instrument.SketchDoubleBuffer`): each sampled step
+publishes a device-side copy of the freshly recorded sketches (dispatch
+only, under the lock the step already holds), and the controller's
+``t1`` reads that quiesced back buffer — the device->host transfer runs
+with **no runtime lock held**, so planning never stalls the serving
+path.
+
 Sharded serving (``EngineConfig.mesh``): the same runtime spans a device
 mesh.  Tables and guards are replicated; each device keeps its own
 instrumentation sketch slice, updated locally inside the jitted step
 (``shard_map``); at plan time the slices are psum-merged on device into
-one global traffic snapshot, which the pass registry consumes unchanged —
-the per-core eBPF pipelines of the paper mapped onto a JAX mesh.  On a
-1-device host pass ``mesh=None`` (or use
-``repro.distributed.meshctx.data_plane_mesh()``, which returns None
-there) and every mesh code path degrades to the classic behavior.
+one global traffic snapshot — the per-core eBPF pipelines of the paper
+mapped onto a JAX mesh.  On a 1-device host pass ``mesh=None`` and every
+mesh code path degrades to the classic behavior.
 
-``t1`` table snapshots run on a dedicated
-:class:`~repro.core.snapshot.TableSnapshotWorker` thread with versioned
-copy-on-write handoff — control-plane updates never wait behind a
-snapshot, and a blocking ``recompile`` no longer charges the copy to its
-caller's thread.
-
-``t2`` is paid only for genuinely new code: executables live in a
+``t2`` is paid only for genuinely new code: executables live in the
 signature-keyed :class:`~repro.core.execcache.ExecutableCache` (plan
-*signature* excludes the table version, so a control-plane bump or an
-oscillating hot set A -> B -> A reuses executables instead of
-re-tracing), a recompile cycle whose planned signature equals the active
-one just *revalidates* — restamps the plan's version under the lock,
-zero trace/compile/swap — and when the specialized + instrumented twins
-do need compiling, their XLA compiles run concurrently on the recompile
-thread.  Pass one cache instance to several runtimes to share it
-(multi-dataplane serving).
+*signature* excludes the table version), a recompile cycle whose planned
+signature equals the active one just *revalidates* — restamps the plan's
+version under the lock, zero trace/compile/swap — and when the
+specialized + instrumented twins do need compiling, their XLA compiles
+run concurrently.
 """
 from __future__ import annotations
 
@@ -64,9 +76,9 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from .controller import ControllerConfig, MorpheusController
 from .engine import EngineConfig, MorpheusEngine
 from .execcache import ExecutableCache, batch_key
-from .instrument import AdaptiveController
 from . import instrument
 from .snapshot import TableSnapshotWorker, VersionedSnapshot
 from .specialize import SpecializationPlan
@@ -76,7 +88,15 @@ from .tables import TableSet
 
 @dataclass
 class RuntimeStats:
-    """Counters and timing histories of one runtime (all host-side)."""
+    """Counters and timing histories of one runtime (all host-side).
+
+    Mutated concurrently by the dispatch path, the control plane, and
+    the controller's recompile workers — every write goes through
+    :meth:`bump` (scalar counters) or :meth:`log` (histories) under one
+    internal lock, so no increment is ever torn or lost.  Plain
+    attribute *reads* are fine for printouts and tests;
+    :meth:`snapshot` returns a consistent plain-dict copy (what
+    ``controller.stats()`` aggregates across planes)."""
     steps: int = 0
     deopt_steps: int = 0          # routed to generic by the program guard
     instr_steps: int = 0
@@ -92,8 +112,45 @@ class RuntimeStats:
     pass_stats: Dict[str, int] = field(default_factory=dict)
     snapshot_versions: List[int] = field(default_factory=list)
 
+    def __post_init__(self):
+        self._lock = threading.Lock()
+
+    def bump(self, **deltas: int) -> None:
+        """Atomically add ``deltas`` to the named scalar counters."""
+        with self._lock:
+            for name, d in deltas.items():
+                setattr(self, name, getattr(self, name) + d)
+
+    def log(self, name: str, value) -> None:
+        """Atomically append ``value`` to the named history list."""
+        with self._lock:
+            getattr(self, name).append(value)
+
+    def snapshot(self) -> Dict[str, Any]:
+        """A consistent plain-dict copy of every field (lists/dicts
+        shallow-copied) — safe to aggregate while the runtime serves."""
+        with self._lock:
+            out: Dict[str, Any] = {}
+            for f in dataclasses.fields(self):
+                v = getattr(self, f.name)
+                if isinstance(v, list):
+                    v = list(v)
+                elif isinstance(v, dict):
+                    v = dict(v)
+                out[f.name] = v
+            return out
+
 
 _NS_COUNTER = itertools.count()
+
+
+def _instr_has_samples(instr: Dict[str, Dict[str, Any]]) -> bool:
+    """Did this sketch window record anything?  A window with zero
+    totals (no sampled step since the last cycle — e.g. the sampler
+    backed way off) carries no information about traffic, as opposed to
+    evidence that traffic vanished."""
+    return any(int(np.asarray(st.get("total", 0)).sum()) > 0
+               for st in instr.values())
 
 
 class MorpheusRuntime:
@@ -109,34 +166,60 @@ class MorpheusRuntime:
     Parameters: ``user_step(params, ctx, batch)`` written against
     :class:`~repro.core.ctx.DataPlaneCtx`; the :class:`TableSet`;
     model params; one example batch (shapes drive AOT compilation); an
-    :class:`EngineConfig` (set ``cfg.mesh`` for sharded serving); and
-    ``enable=False`` to pin the generic executable (baselines).
+    :class:`EngineConfig` (set ``cfg.mesh`` for sharded serving);
+    ``enable=False`` to pin the generic executable (baselines);
+    ``controller=`` to join an existing
+    :class:`~repro.core.controller.MorpheusController` fleet (omit it
+    for a private single-plane controller); ``exec_cache=`` to override
+    the controller's shared executable cache; ``plane_id=`` to name the
+    plane in controller stats.
     """
 
     def __init__(self, user_step: Callable, tables: TableSet, params,
                  example_batch, cfg: Optional[EngineConfig] = None,
                  enable: bool = True,
-                 exec_cache: Optional[ExecutableCache] = None):
+                 exec_cache: Optional[ExecutableCache] = None,
+                 controller: Optional[MorpheusController] = None,
+                 plane_id: Optional[str] = None):
         self.engine = MorpheusEngine(user_step, tables, cfg)
         self.tables = tables
         self.enable = enable
         self.stats = RuntimeStats()
-        self.controller = AdaptiveController(self.engine.cfg.sketch)
         self.mesh = self.engine.cfg.mesh
+
+        # ---- join (or build) the control plane ----
+        self._private_controller = controller is None
+        if controller is None:
+            controller = MorpheusController(ControllerConfig(
+                exec_cache_capacity=self.engine.cfg.exec_cache_capacity))
+        self.controller = controller
+        self.plane_id = controller.register(self, plane_id)
+        self.sampler = controller.sampler_for(self.plane_id)
+        # tear the control loop down when the owner drops the runtime
+        # without close(): a private controller dies with its plane, a
+        # shared one just stops this plane's snapshot worker.  Neither
+        # finalizer holds a reference back to the runtime (the
+        # controller's plane table is weak), so this cannot leak.  The
+        # handle is kept so close() can detach it — a closed runtime's
+        # later GC must not unregister a NEW plane reusing its plane_id.
+        if self._private_controller:
+            self._finalizer = weakref.finalize(self, controller.close)
+        else:
+            self._finalizer = weakref.finalize(
+                self, controller.unregister, self.plane_id)
 
         self.analysis = self.engine.analyze(params, example_batch)
         self.params = self._place_params(params)
         self.state: PlaneState = self._place_state(self.engine.init_state())
 
         # every executable this runtime holds — specialized, instrumented
-        # twin, generic, run_generic oracles — lives in one LRU
-        # ExecutableCache keyed by plan *signature* (no version).  Pass
-        # ``exec_cache`` to share the cache across runtimes
-        # (multi-dataplane serving); each runtime namespaces its keys
-        # unless EngineConfig.cache_ns opts into full sharing.
+        # twin, generic, run_generic oracles — lives in the controller's
+        # shared LRU ExecutableCache keyed by plan *signature* (no
+        # version); each runtime namespaces its keys unless
+        # EngineConfig.cache_ns opts into full sharing.  An explicit
+        # ``exec_cache=`` overrides the controller's (tests, baselines).
         self.exec_cache = (exec_cache if exec_cache is not None
-                           else ExecutableCache(
-                               self.engine.cfg.exec_cache_capacity))
+                           else controller.exec_cache)
         # process-unique default namespace: id(self) can be recycled by
         # the allocator after a runtime dies, which would serve a dead
         # runtime's executables out of a shared cache
@@ -147,11 +230,16 @@ class MorpheusRuntime:
         self._recompile_mutex = threading.Lock()
         self._compiling = False
         self._queued: List[tuple] = []
-        self._snapshot_worker: Optional[TableSnapshotWorker] = None
         self._closed = False
         self._merge_fn: Optional[Callable] = None
         self._batch_sh_cache: Dict[Any, Any] = {}
         self.last_snapshot: Optional[VersionedSnapshot] = None
+        self._steps_at_cycle = 0
+        # the sketch snapshot retained from the last ARMED cycle: while
+        # the sampler has the instrumented twin swapped out, plans keep
+        # being built from this profile instead of an empty one (which
+        # would drop every traffic-dependent fast path and oscillate)
+        self._plan_instr: Dict[str, Dict[str, Any]] = {}
 
         # generic + generic-instrumented executables (always available;
         # the runtime holds direct references so cache eviction can
@@ -173,6 +261,12 @@ class MorpheusRuntime:
                             Callable] = (
             self.generic_plan, gen_exec, gen_instr, gen_exec)
         self._example_batch = example_batch
+
+        # double-buffered instrumentation: publish the initial (zeroed)
+        # sketches now — this also compiles the tiny jitted copy fn
+        # outside any lock, so steady-state publishes are dispatch-only
+        self._backbuf = instrument.SketchDoubleBuffer()
+        self._backbuf.publish(self.state.instr)
 
         # warm the plan-time psum merge now, while nothing is serving:
         # its one-time jit compile must never happen under the runtime
@@ -230,7 +324,8 @@ class MorpheusRuntime:
 
     @property
     def instr_exec(self) -> Callable:
-        """The active instrumented twin."""
+        """The active instrumented twin (the specialized executable
+        itself while the sampler has instrumentation disarmed)."""
         return self._active[2]
 
     @property
@@ -244,7 +339,9 @@ class MorpheusRuntime:
         """The instrumented twin of ``plan`` — ``plan`` itself when no
         site is instrumented (``isites``, the caller's once-per-cycle
         snapshot): with nothing to record, the twin traces to identical
-        code, so one executable serves both dispatch roles."""
+        code, so one executable serves both dispatch roles.  A disarmed
+        sampler passes ``isites=()`` — that is how the twin gets swapped
+        out entirely."""
         if plan.instrumented or not isites:
             return plan
         return dataclasses.replace(plan, instrumented=True,
@@ -286,8 +383,8 @@ class MorpheusRuntime:
         instr_struct = tuple(sorted(state.instr.keys()))
         key = self._exec_key(self.generic_plan, batch, False,
                              instr_struct)
-        exe = self.exec_cache.get(key)
-        if exe is None:
+        exe = self.exec_cache.probe(key)    # miss accounting happens in
+        if exe is None:                     # get_or_compile, not twice
             exe = self._compile_into_cache(
                 [(self.generic_plan, False)], batch, state=state,
                 instr_struct=instr_struct, serving=False)[0]
@@ -302,16 +399,22 @@ class MorpheusRuntime:
         avals and insert it into the cache.  Two or more pairs compile
         concurrently — one thread per executable; XLA compilation
         releases the GIL, so the specialized and instrumented twins' t2
-        overlaps on the recompile path.  ``serving=False`` (the oracle)
-        keeps RuntimeStats' t2 history and cache counters untouched —
-        they describe the Morpheus cycle, not oracle traffic (the
-        cache's own ``stats`` always count)."""
+        overlaps on the recompile path.  Compiles go through
+        ``ExecutableCache.get_or_compile``, so when several data planes
+        sharing one cache (``EngineConfig.cache_ns``) chase the same
+        fleet-wide config push, each key is XLA-compiled by exactly one
+        plane and the rest wait for its insert (no compile stampede).
+        ``serving=False`` (the oracle) keeps RuntimeStats' t2 history
+        and cache counters untouched — they describe the Morpheus cycle,
+        not oracle traffic (the cache's own ``stats`` always count)."""
         results: List[Any] = [None] * len(plans)
 
         def compile_one(i: int, plan: SpecializationPlan, donate: bool):
+            key = self._exec_key(plan, batch, donate, instr_struct)
             try:
-                results[i] = ("ok", self.engine.compile(
-                    plan, self.params, state, batch, donate=donate))
+                results[i] = ("ok", self.exec_cache.get_or_compile(
+                    key, lambda: self.engine.compile(
+                        plan, self.params, state, batch, donate=donate)))
             except BaseException as e:          # re-raised on the caller
                 results[i] = ("err", e)
 
@@ -333,11 +436,11 @@ class MorpheusRuntime:
                 raise payload
             compiled, t2 = payload
             if serving:
-                self.stats.t2_history.append(t2)
-                self.stats.cache_misses += 1
-            self.exec_cache.put(
-                self._exec_key(plan, batch, donate, instr_struct),
-                compiled)
+                if t2 is not None:          # this plane paid the t2
+                    self.stats.log("t2_history", t2)
+                    self.stats.bump(cache_misses=1)
+                else:                       # another plane's compile (or
+                    self.stats.bump(cache_hits=1)   # a racing insert)
             out.append(compiled)
         return out
 
@@ -345,9 +448,10 @@ class MorpheusRuntime:
     def step(self, batch):
         """Run one serving step; returns the user output.  Dispatch is
         the paper's three-way choice: deopt to generic when the program
-        guard trips, the instrumented twin on sampled steps, else the
+        guard trips, the instrumented twin on sampled steps (cadence set
+        by the controller's per-plane sampling state machine), else the
         specialized executable."""
-        self.stats.steps += 1
+        self.stats.bump(steps=1)
         batch = self._place_batch(batch)
         # dispatch + execute + commit in ONE critical section: the
         # recompile thread replaces the (plan, exec, instr_exec,
@@ -358,17 +462,24 @@ class MorpheusRuntime:
         # commit of the fresh state (the executable donates its buffers).
         with self._lock:
             plan, spec_exec, instr_exec, generic_exec = self._active
+            sampled = False
             # program-level guard: ONE host compare covers every RO table
             if self.tables.version != plan.version:
                 exec_ = generic_exec
-                self.stats.deopt_steps += 1
+                self.stats.bump(deopt_steps=1)
             elif (self.enable
-                  and self.controller.should_sample(self.stats.steps)):
+                  and self.sampler.should_sample(self.stats.steps)):
                 exec_ = instr_exec
-                self.stats.instr_steps += 1
+                sampled = True
+                self.stats.bump(instr_steps=1)
             else:
                 exec_ = spec_exec
             out, self.state = exec_(self.params, self.state, batch)
+            if sampled and self.state.instr:
+                # publish the freshly recorded sketches to the back
+                # buffer: a device-side copy, dispatch-only — the t1
+                # readout then never needs this lock
+                self._backbuf.publish(self.state.instr)
         return out
 
     def run_generic(self, batch):
@@ -411,44 +522,42 @@ class MorpheusRuntime:
         return self._merge_fn(instr)
 
     def _host_instr_snapshot(self) -> Dict[str, Dict[str, Any]]:
-        """Host copy of the instrumentation sketches, taken under the
-        runtime lock so no in-flight step can donate the buffers
-        mid-copy.  On a mesh the per-device slices are psum-merged on
-        device first, so the host (and the pass registry) always sees
+        """Host copy of the instrumentation sketches, read from the
+        double-buffered *back* buffer — quiesced device copies published
+        by the sampled steps themselves, so **no runtime lock is held**
+        for the device->host transfer (sketches only advance on sampled
+        steps, so the back buffer is exactly the current contents, not
+        an approximation).  On a mesh the per-device slices are
+        psum-merged on device first, so the pass registry always sees
         ONE global traffic snapshot regardless of topology."""
-        with self._lock:
-            instr = self.state.instr
-            if self.mesh is not None and instr:
-                instr = self._merge_instr_on_device(instr)
-            return {sid: {k: np.asarray(v) for k, v in st.items()}
-                    for sid, st in instr.items()}
+        instr = self._backbuf.read()
+        if self.mesh is not None and instr:
+            instr = self._merge_instr_on_device(instr)
+        return {sid: {k: np.asarray(v) for k, v in st.items()}
+                for sid, st in instr.items()}
 
     # ---- control plane -------------------------------------------------
     @property
     def snapshot_worker(self) -> TableSnapshotWorker:
-        """The off-thread t1 snapshotter (created on first use; raises
-        after :meth:`close` so a racing background recompile cannot
-        silently resurrect the thread).  A finalizer stops the worker
-        when the runtime is garbage-collected, so callers that never
-        bother with :meth:`close` (examples, benchmarks building
-        runtimes in a loop) do not accumulate parked threads."""
+        """This plane's off-thread t1 snapshotter — owned by the
+        controller, created on first use, stopped when the plane is
+        unregistered or the controller closed.  Raises after
+        :meth:`close` so a racing background recompile cannot silently
+        resurrect the thread."""
         if self._closed:
             raise RuntimeError("runtime closed")
-        if self._snapshot_worker is None:
-            worker = TableSnapshotWorker(self.tables)
-            self._snapshot_worker = worker
-            weakref.finalize(self, worker.stop)
-        return self._snapshot_worker
+        return self.controller.snapshot_worker_for(self)
 
     def control_update(self, name: str, fields, n_valid=None) -> None:
         """Control-plane table write.  Queued while a compile is in
         flight (§4.4), else applied now; either way the device copy is
-        refreshed and the program guard deopts specialized executables
-        until the next recompile."""
+        refreshed, the program guard deopts specialized executables
+        until the next recompile, and the controller re-arms this
+        plane's instrumentation sampling."""
         with self._lock:
             if self._compiling:
                 self._queued.append((name, fields, n_valid))
-                self.stats.queued_updates += 1
+                self.stats.bump(queued_updates=1)
                 return
         self._apply_update(name, fields, n_valid)
 
@@ -464,8 +573,8 @@ class MorpheusRuntime:
                     tables[name],
                     NamedSharding(self.mesh, PartitionSpec()))
             self.state = self.state.replace(tables=tables)
-        if self._snapshot_worker is not None:
-            self._snapshot_worker.request()   # refresh snapshot off-thread
+        # re-arm sampling + refresh the t1 snapshot off-thread
+        self.controller.notify_update(self)
 
     def set_feature(self, name: str, value: bool) -> None:
         """Flip a control-plane feature flag.  Bumps the table version:
@@ -473,26 +582,31 @@ class MorpheusRuntime:
         executable compiled with the old pinning."""
         self.engine.cfg.features[name] = value
         self.tables.bump_version(f"flag:{name}")   # control-plane state
-        if self._snapshot_worker is not None:
-            self._snapshot_worker.request()
+        self.controller.notify_update(self)
 
     # ---- recompilation ---------------------------------------------------
     def recompile(self, block: bool = True) -> Optional[dict]:
-        """Run one Morpheus compilation cycle (§4.4).  block=False runs on
-        a background thread — the data plane keeps executing the old code
-        meanwhile.  Even with block=True the t1 table snapshot runs on
-        the snapshot worker's thread, never this one."""
+        """Run one Morpheus compilation cycle (§4.4).  ``block=False``
+        queues the cycle on the controller's bounded recompile worker
+        pool (coalesced if one is already pending for this plane) — the
+        data plane keeps executing the old code meanwhile.  Even with
+        ``block=True`` the t1 table snapshot runs on the snapshot
+        worker's thread, never this one."""
         if not self.enable:
             return None
         if block:
             return self._recompile_now()
-        with self._lock:
-            if self._compiling:
-                return None            # one in-flight compile at a time
-            self._compiling = True
-        th = threading.Thread(target=self._recompile_now, daemon=True)
-        th.start()
+        self.controller.schedule(self)
         return None
+
+    def recompile_priority(self) -> float:
+        """Scheduler ordering for this plane: staleness (control-plane
+        versions the active plan is behind) × traffic weight (steps
+        served since this plane's last cycle), both floored at one so a
+        queued plane always eventually runs."""
+        staleness = max(self.tables.version - self.plan.version, 0) + 1
+        traffic = max(self.stats.steps - self._steps_at_cycle, 1)
+        return float(staleness * traffic)
 
     def _get_many(self, plans: List[SpecializationPlan], batch,
                   instr_struct: Tuple[str, ...]) -> List[Callable]:
@@ -515,11 +629,13 @@ class MorpheusRuntime:
         for k, p in zip(keys, plans):
             if k in found or any(k == mk for mk, _ in missing):
                 continue
-            exe = self.exec_cache.get(k)
+            # probe, not get: a miss here flows into get_or_compile,
+            # which does the authoritative miss accounting
+            exe = self.exec_cache.probe(k)
             if exe is None:
                 missing.append((k, p))
             else:
-                self.stats.cache_hits += 1
+                self.stats.bump(cache_hits=1)
                 found[k] = exe
         if missing:
             state = self.state.replace(
@@ -531,12 +647,29 @@ class MorpheusRuntime:
                 found[k] = exe
         return [found[k] for k in keys]
 
+    def _fresh_instr_guards(self, isites: Tuple[str, ...]
+                            ) -> Tuple[Dict, Dict]:
+        """A fresh sketch window + zeroed RW guards for newly swapped
+        code, built and mesh-placed OUTSIDE the runtime lock — the
+        commit under the lock is then a plain ``state.replace``."""
+        instr = self.engine.init_instr_state(isites)
+        guards = self.engine.init_guards()
+        if self.mesh is not None:
+            from ..distributed.sharding import plane_state_shardings
+            sh = plane_state_shardings(
+                PlaneState({}, instr, guards), self.mesh,
+                self.engine.cfg.instr_axes)
+            instr = jax.device_put(instr, sh.instr)
+            guards = jax.device_put(guards, sh.guards)
+        return instr, guards
+
     def _recompile_now(self) -> dict:
-        # ONE cycle at a time.  recompile(block=False) single-flights
-        # via _compiling, but a blocking recompile can race a background
-        # one — this mutex serializes whole cycles, which is what makes
-        # the pre-swap reads of _active/_active_isites below safe (the
-        # only other writer is another cycle).
+        # ONE cycle at a time.  The controller's scheduler never runs
+        # two cycles for the same plane concurrently, but a blocking
+        # recompile can race a scheduled one — this mutex serializes
+        # whole cycles, which is what makes the pre-swap reads of
+        # _active/_active_isites below safe (the only other writer is
+        # another cycle).
         with self._recompile_mutex:
             return self._recompile_cycle()
 
@@ -545,25 +678,41 @@ class MorpheusRuntime:
             self._compiling = True
         try:
             # t1: versioned snapshot handoff (copied on the worker
-            # thread) + merged instrumentation readout + pass planning
+            # thread) + lock-free back-buffer instrumentation readout +
+            # pass planning.  While the sampler has this plane disarmed
+            # the live sketches are gone from the state, so plan from
+            # the profile retained at the last armed cycle — dropping it
+            # would lose every traffic-dependent fast path and make the
+            # signature oscillate.
             snap = self.snapshot_worker.get(self.tables.version)
             self.last_snapshot = snap
-            self.stats.snapshot_versions.append(snap.version)
+            self.stats.log("snapshot_versions", snap.version)
             instr = self._host_instr_snapshot()
+            if self.sampler.armed and _instr_has_samples(instr):
+                self._plan_instr = instr
+            else:
+                # an empty window (disarmed plane, or no sampled step
+                # landed since the last cycle) carries no new traffic
+                # information — plan from the retained profile instead
+                # of dropping every traffic-dependent fast path and
+                # oscillating the signature
+                instr = self._plan_instr or instr
             plan, t1, pass_stats = self.engine.build_plan(
                 instr, snapshot=snap.tables, version=snap.version)
-            self.stats.t1_history.append(t1)
+            self.stats.log("t1_history", t1)
             self.stats.pass_stats = pass_stats
 
-            # update hot-set stability -> adapt sampling cadence
-            for sid, st in instr.items():
-                hot, cov, _ = instrument.hot_keys(st,
-                                                  self.engine.cfg.sketch)
-                self.controller.observe(sid, hot)
+            # plan churn drives this plane's sampling duty cycle; after
+            # enough stable cycles the sampler disarms and isites
+            # becomes () — the swap below then installs executables
+            # with no sketches in their state at all (the instrumented
+            # twin is swapped out, per the paper's adaptive
+            # instrumentation)
+            self.sampler.observe_cycle(plan.signature)
+            isites = self._isites() if self.sampler.armed else ()
 
             active_plan, active_exec, active_instr, active_generic = \
                 self._active
-            isites = self._isites()
             if (self.engine.cfg.signature_cache
                     and plan.signature == active_plan.signature
                     and isites == self._active_isites):
@@ -575,16 +724,18 @@ class MorpheusRuntime:
                 # re-arm exactly as a swap would: the plan came from a
                 # snapshot that saw every write the guards were
                 # tracking.
+                fresh_instr, fresh_guards = \
+                    self._fresh_instr_guards(isites)
                 with self._lock:
                     self._active = (
                         dataclasses.replace(active_plan,
                                             version=plan.version),
                         active_exec, active_instr, active_generic)
-                    self.state = self._place_state(self.state.replace(
-                        instr=self.engine.init_instr_state(isites),
-                        guards=self.engine.init_guards()))
-                self.stats.revalidations += 1
-                self.stats.recompiles += 1
+                    self.state = self.state.replace(
+                        instr=fresh_instr, guards=fresh_guards)
+                    self._backbuf.publish(fresh_instr)
+                self.stats.bump(revalidations=1, recompiles=1)
+                self._steps_at_cycle = self.stats.steps
                 return {"t1": t1, "pass_stats": pass_stats,
                         "plan": self.plan.label,
                         "n_sites": len(plan.sites),
@@ -593,34 +744,41 @@ class MorpheusRuntime:
             wanted = [plan, self._instr_twin(plan, isites)]
             if isites != self._active_isites:
                 # the instr topology changed (a site crossed the inline
-                # threshold, instrumentation toggled): the deopt targets
-                # must match the new state structure too — compiled in
-                # the SAME concurrent batch as the twins
+                # threshold, the sampler disarmed or re-armed): the
+                # deopt targets must match the new state structure too —
+                # compiled in the SAME concurrent batch as the twins
                 wanted += [self.generic_plan,
                            self._instr_twin(self.generic_plan, isites)]
             execs = self._get_many(wanted, self._example_batch, isites)
-            new_exec, new_instr = execs[0], execs[1]
+            new_exec, new_instr_exec = execs[0], execs[1]
             new_generic = (execs[2] if len(execs) > 2
                            else active_generic)
             new_generic_instr = (execs[3] if len(execs) > 3
                                  else self.generic_instr_exec)
 
+            # fresh sketch window + guards built (and the back-buffer
+            # copy fn traced, on a structure change) outside the lock
+            fresh_instr, fresh_guards = self._fresh_instr_guards(isites)
+            self._backbuf.publish(fresh_instr)
             t0 = time.time()
             with self._lock:
                 # ATOMIC swap (the BPF_PROG_ARRAY pointer update): one
                 # reference assignment replaces the whole tuple
-                self._active = (plan, new_exec, new_instr, new_generic)
+                self._active = (plan, new_exec, new_instr_exec,
+                                new_generic)
                 self.generic_instr_exec = new_generic_instr
                 self._active_isites = isites
                 # reset sketch window + revalidate RW guards for the new
                 # code — from the SAME site snapshot the executables
                 # were keyed and lowered with
-                self.state = self._place_state(self.state.replace(
-                    instr=self.engine.init_instr_state(isites),
-                    guards=self.engine.init_guards()))
-            self.stats.swap_history.append(time.time() - t0)
-            self.stats.recompiles += 1
-            self.stats.swaps += 1
+                self.state = self.state.replace(
+                    instr=fresh_instr, guards=fresh_guards)
+                # re-publish under the lock: a sampled step may have
+                # published pre-swap sketches since the warm above
+                self._backbuf.publish(fresh_instr)
+            self.stats.log("swap_history", time.time() - t0)
+            self.stats.bump(recompiles=1, swaps=1)
+            self._steps_at_cycle = self.stats.steps
             return {"t1": t1, "pass_stats": pass_stats,
                     "plan": plan.label, "n_sites": len(plan.sites),
                     "revalidated": False}
@@ -646,12 +804,19 @@ class MorpheusRuntime:
         return self.plan.hot_experts(self.engine.cfg.moe_router_table)
 
     def close(self) -> None:
-        """Stop the snapshot worker thread.  Idempotent.  The runtime
-        remains usable for stepping (and an in-flight background
-        recompile finishes or fails cleanly), but further recompiles
-        raise — a closed runtime never restarts the worker behind the
-        caller's back."""
+        """Detach from the control plane.  Idempotent.  With a private
+        controller (the single-runtime convenience path) the whole
+        controller is closed — recompile workers and the snapshot worker
+        stop; with a shared controller only this plane is unregistered.
+        The runtime remains usable for stepping (and an in-flight
+        background recompile finishes or fails cleanly), but further
+        recompiles raise — a closed runtime never restarts the workers
+        behind the caller's back."""
         self._closed = True
-        if self._snapshot_worker is not None:
-            self._snapshot_worker.stop()
-            self._snapshot_worker = None
+        # the GC-time safety net is no longer needed — and must not fire
+        # later against a new plane registered under this plane_id
+        self._finalizer.detach()
+        if self._private_controller:
+            self.controller.close()
+        else:
+            self.controller.unregister(self.plane_id)

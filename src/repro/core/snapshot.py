@@ -24,6 +24,12 @@ controller must stay off the hot path).
 
 The worker is event-driven (no polling): ``request()`` kicks it after a
 control-plane update, ``get()`` kicks and waits.
+
+Ownership: workers are created and torn down by
+:class:`~repro.core.controller.MorpheusController` (one per registered
+data plane) — the runtime's ``snapshot_worker`` property delegates
+there.  The class itself stays fleet-agnostic: one worker snapshots one
+:class:`TableSet`.
 """
 from __future__ import annotations
 

@@ -3,12 +3,23 @@
     python -m repro.launch.serve --steps 200 --locality high
     python -m repro.launch.serve --steps 200 --no-morpheus   # baseline
     python -m repro.launch.serve --steps 200 --mesh auto     # sharded
+    python -m repro.launch.serve --steps 200 --planes 4      # one
+                                 # controller driving 4 data planes
 
 With ``--mesh auto`` (the default) the runtime spans every local device
 as a 1-D ``("data",)`` mesh: batches and instrumentation sketches are
 device-local, tables replicated, and the plan is built from the
 psum-merged global traffic snapshot.  On a 1-device host this degrades
 to the classic single-device runtime.
+
+With ``--planes N`` (or ``--controller``) one
+:class:`~repro.core.controller.MorpheusController` drives N runtimes on
+distinct table sets from one process: shared executable cache
+(``cache_ns`` sharing across the fleet), one bounded recompile worker
+pool prioritizing planes by staleness x traffic, and per-plane adaptive
+sampling duty cycles that disarm once a plane's plan stabilizes.  The
+driver prints per-plane stats plus the controller-level aggregate
+(recompiles scheduled/coalesced, duty cycles, cache hit rate).
 """
 from __future__ import annotations
 
@@ -19,10 +30,24 @@ import time
 import jax
 import numpy as np
 
-from ..core import EngineConfig, MorpheusRuntime, SketchConfig
+from ..core import ControllerConfig, EngineConfig, MorpheusController, \
+    MorpheusRuntime, SketchConfig
 from ..distributed.meshctx import data_plane_mesh
-from ..serving import ServeConfig, build_params, build_tables, \
-    make_request_batch, make_serve_step
+from ..serving import ServeConfig, build_fleet, build_params, \
+    build_tables, make_request_batch, make_serve_step
+
+
+def _skewed_params(cfg: ServeConfig, key, skew_router: bool):
+    params = build_params(cfg, key)
+    if skew_router:
+        # trained routers are domain-skewed; emulate with an additive
+        # per-expert routing bias (DeepSeek-v3-style bias term)
+        import jax.numpy as jnp
+        for lp in params["layers"]:
+            bias = np.zeros(cfg.n_experts, np.float32)
+            bias[:3] = 6.0
+            lp["moe"]["b_router"] = jnp.asarray(bias)
+    return params
 
 
 def run_serve(steps=200, locality="high", morpheus=True,
@@ -38,15 +63,7 @@ def run_serve(steps=200, locality="high", morpheus=True,
     previous process already built."""
     cfg = serve_cfg or ServeConfig()
     key = jax.random.PRNGKey(0)
-    params = build_params(cfg, key)
-    if skew_router:
-        # trained routers are domain-skewed; emulate with an additive
-        # per-expert routing bias (DeepSeek-v3-style bias term)
-        import jax.numpy as jnp
-        for lp in params["layers"]:
-            bias = np.zeros(cfg.n_experts, np.float32)
-            bias[:3] = 6.0
-            lp["moe"]["b_router"] = jnp.asarray(bias)
+    params = _skewed_params(cfg, key, skew_router)
     tables = build_tables(cfg, key)
     step_fn = make_serve_step(cfg)
     if mesh == "auto":
@@ -104,6 +121,103 @@ def run_serve(steps=200, locality="high", morpheus=True,
     return stats, rt
 
 
+def run_controller_serve(planes=2, steps=200, locality="high",
+                         recompile_every=50, batch_size=8,
+                         skew_router=True, quiet=False, serve_cfg=None,
+                         workers=2, mesh="auto", xla_cache_dir=None):
+    """One :class:`MorpheusController` driving ``planes`` data planes
+    (distinct TableSets, per-plane traffic skew) from one process.
+    Recompiles go through the controller's bounded worker pool
+    (non-blocking, coalesced, staleness x traffic priority); each
+    plane's sampling duty cycle adapts — and disarms — independently.
+    ``mesh`` works as in :func:`run_serve` — every plane spans the same
+    mesh (sharded batches/sketches, replicated tables).  Returns
+    ``(stats, controller, runtimes)``."""
+    cfg = serve_cfg or ServeConfig()
+    key = jax.random.PRNGKey(0)
+    params = _skewed_params(cfg, key, skew_router)
+    if mesh == "auto":
+        mesh = data_plane_mesh()
+    elif mesh == "none":
+        mesh = None
+    controller = MorpheusController(ControllerConfig(workers=workers))
+    ecfg_kw = dict(
+        sketch=SketchConfig(sample_every=4, max_hot=4, hot_coverage=0.8),
+        moe_router_table="router",
+        mesh=mesh,
+        # identical step fn / schemas / shapes across the fleet: opt
+        # every plane into FULL executable sharing in the controller's
+        # cache — the generic executable is compiled once, not N times
+        cache_ns="serve-fleet",
+        xla_cache_dir=xla_cache_dir)
+    rts = []
+    for p, (step_fn, tables) in enumerate(
+            build_fleet(cfg, key, planes)):
+        ecfg = EngineConfig(features={"vision_enabled": False,
+                                      "track_sessions": True},
+                            **ecfg_kw)
+        rts.append(MorpheusRuntime(
+            step_fn, tables, params,
+            make_request_batch(cfg, key, batch_size),
+            cfg=ecfg, controller=controller, plane_id=f"plane-{p}"))
+
+    t_start = time.time()
+    lat = []
+    for i in range(steps):
+        for p, rt in enumerate(rts):
+            # each plane sees its own traffic skew (hot_offset) — the
+            # controller must keep their plans independent
+            batch = make_request_batch(
+                cfg, jax.random.PRNGKey(1000 * p + i), batch_size,
+                locality=locality, hot_offset=7 * p)
+            t0 = time.time()
+            jax.block_until_ready(rt.step(batch))
+            lat.append(time.time() - t0)
+        if (i + 1) % recompile_every == 0:
+            n = controller.schedule_all()
+            controller.drain()
+            if not quiet:
+                duty = {pid: f"{s['duty_cycle']:.2f}" for pid, s in
+                        controller.stats().sampling.items()}
+                print(f"[serve] cycle@{i+1}: scheduled={n} "
+                      f"duty={duty}", flush=True)
+    wall = time.time() - t_start
+    lat = np.array(lat)
+    cstats = controller.stats()
+    stats = {
+        "planes": planes,
+        "n_devices": mesh.size if mesh is not None else 1,
+        "steps": steps,
+        "req_per_s": steps * planes * batch_size / lat.sum(),
+        "p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "wall_s": wall,
+        "controller": cstats,
+    }
+    if not quiet:
+        for pid, rt in zip(cstats.planes, rts):
+            ps = cstats.planes[pid]
+            samp = cstats.sampling[pid]
+            print(f"[serve]   {pid}: steps={ps['steps']} "
+                  f"recompiles={ps['recompiles']} "
+                  f"reval={ps['revalidations']} "
+                  f"deopt={ps['deopt_steps']} "
+                  f"duty={samp['duty_cycle']:.2f} "
+                  f"armed={samp['armed']} "
+                  f"hot_experts={rt.hot_experts()}", flush=True)
+        sch = cstats.scheduler
+        print(f"[serve] controller: planes={planes} "
+              f"devices={stats['n_devices']} "
+              f"{stats['req_per_s']:.1f} req/s p50={stats['p50_ms']:.1f}ms "
+              f"scheduled={sch['scheduled']} "
+              f"coalesced={sch['coalesced']} "
+              f"completed={sch['completed']} "
+              f"cache_hit_rate={cstats.cache_hit_rate:.2f} "
+              f"recompiles={cstats.totals.get('recompiles', 0)}",
+              flush=True)
+    return stats, controller, rts
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
@@ -115,11 +229,33 @@ def main(argv=None) -> int:
     ap.add_argument("--mesh", default="auto", choices=["auto", "none"],
                     help="'auto': span all local devices; 'none': force "
                          "single-device")
+    ap.add_argument("--planes", type=int, default=1, metavar="N",
+                    help="serve N data planes (distinct table sets) "
+                         "under ONE controller; implies --controller")
+    ap.add_argument("--controller", action="store_true",
+                    help="route recompiles through a MorpheusController "
+                         "fleet even for a single plane")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="controller recompile worker pool size")
     ap.add_argument("--xla-cache-dir", default=None, metavar="DIR",
                     help="persistent XLA compilation cache directory — "
                          "warm restarts skip t2 for executables already "
                          "built by a previous process")
     args = ap.parse_args(argv)
+    if args.planes > 1 or args.controller:
+        if args.no_morpheus:
+            print("[serve] --no-morpheus is a single-plane baseline "
+                  "mode; it does not combine with --planes/--controller",
+                  file=sys.stderr)
+            return 2
+        _, controller, rts = run_controller_serve(
+            planes=args.planes, steps=args.steps,
+            locality=args.locality,
+            recompile_every=args.recompile_every,
+            batch_size=args.batch_size, workers=args.workers,
+            mesh=args.mesh, xla_cache_dir=args.xla_cache_dir)
+        controller.close()
+        return 0
     _, rt = run_serve(steps=args.steps, locality=args.locality,
                       morpheus=not args.no_morpheus,
                       recompile_every=args.recompile_every,

@@ -1,2 +1,2 @@
-from .dataplane import ServeConfig, build_params, build_tables, \
-    make_request_batch, make_serve_step
+from .dataplane import ServeConfig, build_fleet, build_params, \
+    build_tables, make_request_batch, make_serve_step

@@ -214,6 +214,20 @@ def make_serve_step(cfg: ServeConfig):
     return serve_step
 
 
+def build_fleet(cfg: ServeConfig, key, n_planes: int,
+                **table_kw) -> list:
+    """N data planes for one :class:`~repro.core.controller.\
+MorpheusController`: a list of ``(step_fn, tables)`` pairs with
+    **distinct** :class:`TableSet` instances (each plane's control plane
+    versions independently — the program guards must not couple) but one
+    shared step function and identical schemas/shapes, which is what
+    makes ``EngineConfig.cache_ns`` executable sharing across the fleet
+    valid.  ``table_kw`` forwards to :func:`build_tables`."""
+    step = make_serve_step(cfg)
+    return [(step, build_tables(cfg, key, **table_kw))
+            for _ in range(n_planes)]
+
+
 def make_request_batch(cfg: ServeConfig, key, batch_size=8,
                        locality: str = "high", hot_classes=4,
                        hot_offset: int = 0, hot_slots: int = 0,

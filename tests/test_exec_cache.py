@@ -7,6 +7,9 @@ ZERO XLA compiles (revalidation); a cycle whose signature is cached
 swaps without compiling; oscillating churn (A -> B -> A) compiles each
 distinct signature exactly once.
 """
+import threading
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -34,6 +37,68 @@ def test_cache_lru_eviction_and_stats():
     assert c.stats.evictions == 1
     assert c.stats.hits == 3 and c.stats.misses == 1
     assert len(c) == 2
+
+
+def test_get_or_compile_deduplicates_inflight_compiles():
+    """The multi-plane stampede guard: concurrent get_or_compile calls
+    for one key run compile_fn exactly once — the second caller waits
+    for the owner's insert instead of compiling again."""
+    c = ExecutableCache(capacity=8)
+    started, gate = threading.Event(), threading.Event()
+    compiles = []
+
+    def slow():
+        started.set()
+        assert gate.wait(timeout=10)
+        compiles.append(1)
+        return "exe", 1.23
+
+    out = []
+    t1 = threading.Thread(
+        target=lambda: out.append(c.get_or_compile("k", slow)))
+    t1.start()
+    assert started.wait(timeout=10)          # owner is inside compile_fn
+    t2 = threading.Thread(
+        target=lambda: out.append(c.get_or_compile("k", slow)))
+    t2.start()
+    time.sleep(0.05)                         # t2 parks as a waiter
+    gate.set()
+    t1.join(10)
+    t2.join(10)
+    assert len(compiles) == 1
+    by_aux = sorted(out, key=lambda p: p[1] is None)
+    assert by_aux[0] == ("exe", 1.23)        # the owner paid (got aux)
+    assert by_aux[1] == ("exe", None)        # the waiter shared it
+    assert c.stats.inflight_waits == 1
+    assert c.stats.inserts == 1
+
+
+def test_get_or_compile_owner_failure_unwedges_waiters():
+    c = ExecutableCache(capacity=8)
+    started = threading.Event()
+
+    def bad():
+        started.set()
+        time.sleep(0.05)
+        raise RuntimeError("t2 died")
+
+    res = {}
+
+    def owner():
+        try:
+            c.get_or_compile("k", bad)
+        except RuntimeError as e:
+            res["owner"] = e
+
+    t = threading.Thread(target=owner)
+    t.start()
+    assert started.wait(timeout=10)
+    # the waiter must claim ownership after the failure and compile
+    res["waiter"] = c.get_or_compile("k", lambda: ("exe", 0.5))
+    t.join(10)
+    assert isinstance(res["owner"], RuntimeError)
+    assert res["waiter"] == ("exe", 0.5)
+    assert c.get("k") == "exe"
 
 
 # ---------------------------------------------------------------------------

@@ -92,10 +92,8 @@ def test_control_plane_update_deopt_and_recover(system):
 
 def test_unsupervised_adaptation_to_drift(system):
     cfg, rt = system
-    # earlier tests let the adaptive controller back off; pin the cadence
-    rt.controller.min_every = 2
-    rt.controller.max_every = 2
-    rt.controller.sample_every = 2
+    # earlier tests let the adaptive sampler back off; pin the cadence
+    rt.sampler.pin(2)
     # ...and the control-plane test made temperatures CONSTANT, which
     # (correctly) promotes const-prop over the fast path — re-diversify
     rng = np.random.default_rng(1)
