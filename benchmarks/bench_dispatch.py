@@ -1,0 +1,270 @@
+"""Dispatch fast-path benchmark — the steady-state serving hot path.
+
+Morpheus' payoff is bounded by the dispatcher that selects the
+specialized code.  The seed runtime held one Python mutex across the
+*entire* dispatch+execute+commit of every step and the serve loop
+``block_until_ready``-ed each one: ~15µs of host time per step before
+the device does any useful work (BENCH_controller.json
+``steady_step_us``).  This benchmark measures the three layers that
+replaced it, on one plane with sampling **disarmed** (the pure steady
+state — no instrumentation, no deopt):
+
+  locked     the seed path, reproduced: a step-wide mutex around every
+             ``step`` call plus a per-step ``block_until_ready`` —
+             K=1, inflight=1.
+  seqlock    the new dispatch: brief claim/commit critical sections,
+             the executable runs outside any lock.  Measured at
+             K=1 (inflight 1 and 4).
+  fused      ``step_many`` — one ``lax.scan``-fused K-step executable
+             per window, one Python dispatch + ONE locked stats update
+             per K steps (inflight 1 and 4: the pipelined serve loop
+             keeps N windows in flight instead of blocking each).
+
+Regression asserts (the satellite criteria ride here):
+
+  * steady-state ``step()`` makes at most ONE locked ``RuntimeStats``
+    call per step — and ``step_many`` at most one per fused *window*;
+  * re-stepping an already-placed batch performs zero transfers
+    (``stats.batch_transfers`` stays flat on a mesh host).
+
+``json_record()`` feeds ``BENCH_dispatch.json`` (written by
+``benchmarks/run.py`` and the CI smoke job): steps/s and p50/p99
+per-step latency for K∈{1,8} × inflight∈{1,4}, plus the headline
+``speedup_fused_pipelined`` (K=8, inflight=4 vs the locked baseline).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+from collections import deque
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EngineConfig, MorpheusRuntime, SketchConfig, \
+    Table, TableSet
+
+from ._util import emit
+
+_LAST: dict = {}
+
+N_VALID = 48
+
+
+def _user_step(params, ctx, batch):
+    row = ctx.lookup("classes", batch["cls"], fields=("scale",))
+    return batch["x"] * row["scale"][:, None]
+
+
+def _batch():
+    # deliberately tiny: this benchmark measures DISPATCH, so the step's
+    # device work must not drown the host-side costs under comparison
+    cls = np.arange(4) % N_VALID
+    cls[:3] = np.arange(3) % 3            # skewed: hot classes {0,1,2}
+    return {"cls": jnp.asarray(cls, jnp.int32),
+            "x": jnp.ones((4, 1), jnp.float32)}
+
+
+def _mk_plane() -> MorpheusRuntime:
+    tables = TableSet([Table("classes",
+                             {"scale": np.linspace(1.0, 2.0, N_VALID)
+                              .astype(np.float32)},
+                             n_valid=N_VALID, instrument=True)])
+    cfg = EngineConfig(
+        sketch=SketchConfig(sample_every=2, max_hot=4, hot_coverage=0.5))
+    return MorpheusRuntime(_user_step, tables, None, _batch(), cfg=cfg)
+
+
+def _drive_to_disarm(rt: MorpheusRuntime, batch) -> None:
+    """Step + recompile until the sampler disarms: the measured phase is
+    the pure specialized fast path, zero instrumentation duty."""
+    for _ in range(rt.sampler.disarm_after + 2):
+        for _ in range(4):
+            jax.block_until_ready(rt.step(batch))
+        rt.recompile(block=True)
+    assert not rt.sampler.armed, "sampler failed to disarm"
+
+
+def _measure(step_unit, n_units: int, k: int, inflight: int,
+             repeats: int = 3):
+    """Drive ``n_units`` dispatch units through a bounded-in-flight
+    pipeline, ``repeats`` times; returns (steps_per_s, p50_us, p99_us)
+    per *step* from the fastest round — best-of-N screens out scheduler
+    noise on shared CI hosts, which would otherwise dominate a
+    microsecond-scale comparison."""
+    best = None
+    for _ in range(repeats):
+        pending: deque = deque()
+        lat = []
+
+        def drain(limit):
+            while len(pending) > limit:
+                t0, out = pending.popleft()
+                jax.block_until_ready(out)
+                lat.append(time.time() - t0)
+
+        t_start = time.time()
+        for _ in range(n_units):
+            t0 = time.time()
+            pending.append((t0, step_unit()))
+            drain(inflight - 1)
+        drain(0)
+        wall = time.time() - t_start
+        per_step = np.array(lat) / k
+        round_ = (n_units * k / wall,
+                  float(np.percentile(per_step, 50) * 1e6),
+                  float(np.percentile(per_step, 99) * 1e6))
+        if best is None or round_[0] > best[0]:
+            best = round_
+    return best
+
+
+def _assert_single_locked_stats_call(rt: MorpheusRuntime, batch,
+                                     window, k: int) -> None:
+    """The satellite regression: a steady-state step coalesces every
+    stats delta into ONE locked call; a fused window into one per
+    window."""
+    jax.block_until_ready(rt.step(batch))          # warm
+    lc0, st0 = rt.stats.locked_calls, rt.stats.steps
+    for _ in range(8):
+        jax.block_until_ready(rt.step(batch))
+    d_calls = rt.stats.locked_calls - lc0
+    d_steps = rt.stats.steps - st0
+    assert d_calls <= d_steps, \
+        f"steady-state step made {d_calls} locked stats calls " \
+        f"for {d_steps} steps (must be <= 1 per step)"
+    jax.block_until_ready(rt.step_many(window, k=k))   # warm fused exec
+    lc0 = rt.stats.locked_calls
+    for _ in range(4):
+        jax.block_until_ready(rt.step_many(window, k=k))
+    d_calls = rt.stats.locked_calls - lc0
+    assert d_calls <= 4, \
+        f"fused window made {d_calls} locked stats calls for 4 windows"
+
+
+def _assert_zero_retransfers(batch) -> None:
+    """The placement satellite: a batch placed once is never
+    re-``device_put`` by later steps (committed-sharding fast path).
+    Runs on its OWN 1-device-mesh plane — without a mesh ``_place_batch``
+    short-circuits entirely and the assert would be vacuous."""
+    from jax.sharding import Mesh
+    tables = TableSet([Table("classes",
+                             {"scale": np.linspace(1.0, 2.0, N_VALID)
+                              .astype(np.float32)},
+                             n_valid=N_VALID, instrument=True)])
+    cfg = EngineConfig(
+        sketch=SketchConfig(sample_every=2, max_hot=4, hot_coverage=0.5),
+        mesh=Mesh(np.array(jax.devices()[:1]), ("data",)))
+    rt = MorpheusRuntime(_user_step, tables, None, batch, cfg=cfg)
+    try:
+        host = {k: np.asarray(v) for k, v in batch.items()}
+        placed = rt.place_batch(host)
+        jax.block_until_ready(rt.step(placed))
+        assert rt.stats.batch_transfers == 1, \
+            "host batch placement was not counted as a transfer"
+        placed2 = rt.place_batch(placed)
+        jax.block_until_ready(rt.step(placed2))
+        assert rt.stats.batch_transfers == 1, \
+            "re-placing an already-resident batch performed a transfer"
+    finally:
+        rt.close()
+
+
+def run(tiny: bool = False) -> list:
+    n_steps = 256 if tiny else 2048
+    k_fused = 8
+    batch = _batch()
+
+    rt = _mk_plane()
+    rows = []
+    record = {"config": {"tiny": tiny, "steps": n_steps,
+                         "k_fused": k_fused},
+              "modes": {}}
+    try:
+        _drive_to_disarm(rt, batch)
+        window = rt.place_batch([batch] * k_fused, fused=True)
+        placed = rt.place_batch(batch)
+
+        _assert_single_locked_stats_call(rt, placed, window, k_fused)
+        _assert_zero_retransfers(batch)
+        record["regressions"] = {"locked_stats_calls_per_step": "<=1",
+                                 "resident_batch_retransfers": 0}
+
+        # the seed dispatch, reproduced: one step-wide mutex + one
+        # block_until_ready per step
+        seed_mutex = threading.Lock()
+
+        def locked_step():
+            with seed_mutex:
+                out = rt.step(placed)
+                jax.block_until_ready(out)
+            return out
+
+        modes = [
+            ("locked/k1_if1", locked_step, 1, 1),
+            ("seqlock/k1_if1", lambda: rt.step(placed), 1, 1),
+            ("seqlock/k1_if4", lambda: rt.step(placed), 1, 4),
+            ("fused/k8_if1",
+             lambda: rt.step_many(window, k=k_fused), k_fused, 1),
+            ("fused/k8_if4",
+             lambda: rt.step_many(window, k=k_fused), k_fused, 4),
+        ]
+        for name, fn, k, inflight in modes:
+            for _ in range(2):                     # warm (compile fused)
+                jax.block_until_ready(fn())
+            sps, p50, p99 = _measure(fn, max(n_steps // k, 32), k,
+                                     inflight)
+            record["modes"][name] = {"steps_per_s": sps,
+                                     "p50_step_us": p50,
+                                     "p99_step_us": p99,
+                                     "k": k, "inflight": inflight}
+            rows.append((f"dispatch/{name}", 1e6 / sps,
+                         f"steps_per_s={sps:.0f};p99_us={p99:.1f}"))
+    finally:
+        rt.close()
+
+    base = record["modes"]["locked/k1_if1"]
+    best = record["modes"][f"fused/k{k_fused}_if4"]
+    record["speedup_fused_pipelined"] = (best["steps_per_s"]
+                                         / base["steps_per_s"])
+    record["speedup_fused_only"] = (
+        record["modes"][f"fused/k{k_fused}_if1"]["steps_per_s"]
+        / base["steps_per_s"])
+    record["p99_ratio_k1"] = (record["modes"]["seqlock/k1_if1"]
+                              ["p99_step_us"] / base["p99_step_us"])
+    rows.append(("dispatch/speedup_fused_pipelined",
+                 record["speedup_fused_pipelined"],
+                 f"x_vs_locked={record['speedup_fused_pipelined']:.1f}"
+                 f";p99_ratio_k1={record['p99_ratio_k1']:.2f}"))
+    global _LAST
+    _LAST = record
+    return rows
+
+
+def json_record() -> dict:
+    """The machine-readable result of the last :func:`run` call —
+    written to ``BENCH_dispatch.json`` by ``run.py`` and the CI smoke
+    job."""
+    return dict(_LAST)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke configuration (fewer steps)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the machine-readable record here")
+    args = ap.parse_args(argv)
+    emit(run(tiny=args.tiny))
+    if args.json:
+        Path(args.json).write_text(json.dumps(json_record(), indent=2)
+                                   + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -8,7 +8,7 @@ from .execcache import CacheStats, ExecutableCache, \
 from .instrument import AdaptiveController, SketchConfig, \
     SketchDoubleBuffer
 from .passes import PassRegistry, SpecializationPass, default_registry
-from .runtime import MorpheusRuntime, RuntimeStats
+from .runtime import MorpheusRuntime, RuntimeStats, stack_batches
 from .snapshot import TableSnapshotWorker, VersionedSnapshot
 from .specialize import GENERIC_PLAN, SiteSpec, SpecializationPlan
 from .state import PlaneState

@@ -90,6 +90,26 @@ class PlaneSampling:
         disarmed (the twin is not even installed then)."""
         return self.armed and step % self.sample_every == 0
 
+    def window_every(self, k: int) -> int:
+        """The window-granular cadence for fused K-step execution: one
+        sampled window per ``sample_every`` *windows*.  A sampled window
+        instruments all K of its steps, so this cadence preserves both
+        the per-*step* duty cycle the machine converged to
+        (K / (sample_every x K) = 1/sample_every) and the average sketch
+        data rate (K steps of keys per sample_every x K steps) —
+        dividing by K instead would instrument K times more steps than
+        the adaptive machine decided to pay for."""
+        del k                               # duty is a step fraction —
+        return max(self.sample_every, 1)    # cadence is K-independent
+
+    def should_sample_window(self, window: int, k: int) -> bool:
+        """Route this fused K-step window to the instrumented twin?
+        The window-granular twin of :meth:`should_sample` — the whole
+        window runs instrumented or none of it does (the sampling
+        decision is hoisted out of the ``lax.scan``, like the program
+        guard).  Always False while disarmed."""
+        return self.armed and window % self.window_every(k) == 0
+
     def duty_cycle(self) -> float:
         """Fraction of steps paying instrumentation cost (0 disarmed)."""
         return 0.0 if not self.armed else 1.0 / max(self.sample_every, 1)

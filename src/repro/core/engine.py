@@ -271,13 +271,38 @@ class MorpheusEngine:
             return out, ctx.outputs()
         return step
 
-    def default_shardings(self, state: PlaneState, batch):
+    def make_fused_step_fn(self, plan: SpecializationPlan,
+                           k: int) -> Callable:
+        """The ``lax.scan``-fused K-step variant of
+        :meth:`make_step_fn`: one executable runs K consecutive serving
+        steps, threading the :class:`PlaneState` through the scan carry
+        (table writes, sketches and guards accumulate exactly as K
+        single steps would).  The batch argument carries a leading
+        window axis of size K; outputs come back stacked the same way.
+        Trace-time constants (the plan) are hoisted to window
+        granularity — which is what lets one Python dispatch amortize
+        over K steps."""
+        step = self.make_step_fn(plan)
+
+        def fused(params, state: PlaneState, batches):
+            def body(carry, batch):
+                out, carry = step(params, carry, batch)
+                return carry, out
+
+            state, outs = jax.lax.scan(body, state, batches, length=k)
+            return outs, state
+        return fused
+
+    def default_shardings(self, state: PlaneState, batch, *,
+                          stacked: bool = False):
         """The sharded-serving placement for ``(params, state, batch)``:
         params replicated, ``state`` via
         :func:`repro.distributed.sharding.plane_state_shardings` (tables
         replicated, sketches device-local), batch sharded on its leading
-        dim.  Returns ``(in_shardings, out_shardings)`` prefix pytrees
-        for :meth:`compile`, or ``(None, None)`` without a mesh."""
+        dim — or, with ``stacked=True`` (fused K-step executables), on
+        the per-step dim under an unsharded leading window axis.
+        Returns ``(in_shardings, out_shardings)`` prefix pytrees for
+        :meth:`compile`, or ``(None, None)`` without a mesh."""
         if self.cfg.mesh is None:
             return None, None
         from jax.sharding import NamedSharding, PartitionSpec
@@ -285,7 +310,8 @@ class MorpheusEngine:
             plane_state_shardings
         mesh, axes = self.cfg.mesh, self.cfg.instr_axes
         state_sh = plane_state_shardings(state, mesh, axes)
-        batch_sh = plane_batch_shardings(batch, mesh, axes)
+        batch_sh = plane_batch_shardings(batch, mesh, axes,
+                                         stacked=stacked)
         params_sh = NamedSharding(mesh, PartitionSpec())
         # out sharding: user output left to propagation (None), state
         # pinned to its input placement so donation can reuse buffers.
@@ -293,20 +319,24 @@ class MorpheusEngine:
 
     def lower(self, plan: SpecializationPlan, params, state: PlaneState,
               batch, *, donate: Optional[bool] = None,
-              in_shardings=None, out_shardings=None):
+              in_shardings=None, out_shardings=None,
+              fuse: Optional[int] = None):
         """Stage 1 of ``t2``: build the step function for ``plan`` and
         trace + lower it against the concrete ``(params, state, batch)``
         avals.  Returns the jax ``Lowered`` object; stage 2
         (``.compile()``, the XLA invocation) is separate so callers can
         overlap several compiles — XLA compilation releases the GIL, so
         the runtime XLA-compiles the specialized and instrumented twins
-        concurrently on the recompile thread."""
-        step = self.make_step_fn(plan)
+        concurrently on the recompile thread.  ``fuse=K`` lowers the
+        ``lax.scan``-fused K-step executable instead (``batch`` then
+        carries a leading window axis of size K)."""
+        step = (self.make_step_fn(plan) if fuse is None
+                else self.make_fused_step_fn(plan, fuse))
         donate = self.cfg.donate if donate is None else donate
         if (self.cfg.mesh is not None and in_shardings is None
                 and out_shardings is None):
-            in_shardings, out_shardings = self.default_shardings(state,
-                                                                 batch)
+            in_shardings, out_shardings = self.default_shardings(
+                state, batch, stacked=fuse is not None)
         kw: Dict[str, Any] = {}
         if donate:
             kw["donate_argnums"] = (1,)
@@ -322,7 +352,8 @@ class MorpheusEngine:
 
     def compile(self, plan: SpecializationPlan, params, state: PlaneState,
                 batch, *, donate: Optional[bool] = None,
-                in_shardings=None, out_shardings=None
+                in_shardings=None, out_shardings=None,
+                fuse: Optional[int] = None
                 ) -> Tuple[Callable, float]:
         """AOT-compile ``plan`` into an executable; returns
         ``(executable, t2_seconds)`` where the executable is called as
@@ -340,7 +371,7 @@ class MorpheusEngine:
         t0 = time.time()
         lowered = self.lower(plan, params, state, batch, donate=donate,
                              in_shardings=in_shardings,
-                             out_shardings=out_shardings)
+                             out_shardings=out_shardings, fuse=fuse)
         compiled = lowered.compile()
         with self._count_lock:
             self.compile_count += 1

@@ -94,10 +94,16 @@ class ExecutableCache:
 
     @staticmethod
     def make_key(ns: Hashable, signature: Hashable, bkey: Hashable,
-                 donate: bool = True) -> Hashable:
+                 donate: bool = True,
+                 fuse: Optional[int] = None) -> Hashable:
         """The cache key anatomy: ``(namespace, plan signature, batch
-        structure/shapes, donate)``."""
-        return (ns, signature, bkey, donate)
+        structure/shapes, donate)`` — extended with ``("fuse", K)`` for
+        ``lax.scan``-fused K-step executables, so a fused window and a
+        single step over the same plan never alias (their batch layouts
+        and loop structures differ)."""
+        if fuse is None:
+            return (ns, signature, bkey, donate)
+        return (ns, signature, bkey, donate, ("fuse", fuse))
 
     def __len__(self) -> int:
         with self._lock:

@@ -31,13 +31,30 @@ sampling duty cycles driven by plan churn.
 
 Device state lives in one :class:`PlaneState` pytree (``runtime.state``)
 threaded through every executable; the executables donate its buffers, so
-after a step the *previous* state must be treated as consumed.  All
-``runtime.state`` transitions happen under the runtime lock — a step's
-execute+commit is one critical section, so the control plane and the
-background recompile never observe (or replace) a half-donated state.
-For semantics checks use :meth:`run_generic`, a non-donating twin of the
-generic executable; when replaying a *donating* executable by hand, pass
-it ``state.copy()``.
+after a step the *previous* state must be treated as consumed.  State
+transitions follow a **seqlock/epoch protocol** instead of one step-wide
+mutex: dispatch reads the atomic ``_active`` tuple plus the generation
+counter ``_gen``, claims the single in-flight step slot with a brief
+validated acquire, runs the executable **outside any lock**, and commits
+the fresh state with a second brief critical section.  Writers — the
+background recompile's swap, control-plane table refreshes — quiesce: they
+wait for the in-flight step to commit, mutate under the lock, and bump
+``_gen`` so any dispatch prepared against the old world revalidates and
+retries.  Control updates arriving while a step (or fused window) is in
+flight are queued and drained at commit, so the control plane never
+blocks behind device execution.  For semantics checks use
+:meth:`run_generic`, a non-donating twin of the generic executable; when
+replaying a *donating* executable by hand, pass it ``state.copy()``.
+
+:meth:`step_many` is the fused fast path: a ``lax.scan``-fused K-step
+executable (cached in the :class:`ExecutableCache` with K in the key)
+amortizes the per-step Python dispatch K-fold.  The program guard and
+the sampling decision are hoisted to window granularity — a control
+update landing mid-window deopts the *next* window, same §4.4 semantics
+as single-stepping.  :meth:`place_batch` is the non-blocking prefetch
+half: it device-places a batch asynchronously (arrays already committed
+with the right sharding pass through untouched), so a serve loop can
+overlap the H2D of batch N+1 with the compute of batch N.
 
 Instrumentation readout is **double-buffered**
 (:class:`~repro.core.instrument.SketchDoubleBuffer`): each sampled step
@@ -65,16 +82,33 @@ run concurrently.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 import threading
 import time
 import weakref
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+
+# placement indirection: every batch transfer the runtime performs goes
+# through this hook, so tests (and the zero-transfer regression in
+# benchmarks/bench_dispatch.py) can count actual H2D placements
+_device_put = jax.device_put
+
+
+def stack_batches(batches: Sequence[Any]):
+    """Stack K same-shaped batches into one pytree with a leading window
+    axis — the input contract of :meth:`MorpheusRuntime.step_many`'s
+    fused executable.  Use :meth:`MorpheusRuntime.place_batch` with
+    ``fused=True`` to also device-place the stack ahead of dispatch."""
+    if len(batches) == 1:
+        return jax.tree.map(lambda x: jnp.asarray(x)[None], batches[0])
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
 
 from .controller import ControllerConfig, MorpheusController
 from .engine import EngineConfig, MorpheusEngine
@@ -106,6 +140,12 @@ class RuntimeStats:
     cache_hits: int = 0           # executables served from the exec cache
     cache_misses: int = 0         # executables that had to be compiled
     queued_updates: int = 0
+    batch_transfers: int = 0      # actual H2D batch placements performed
+    locked_calls: int = 0         # stats-lock acquisitions (bump/log) —
+                                  # the dispatch fast path must make at
+                                  # most ONE per step or fused window
+                                  # (regression-checked by
+                                  # benchmarks/bench_dispatch.py)
     t1_history: List[float] = field(default_factory=list)
     t2_history: List[float] = field(default_factory=list)
     swap_history: List[float] = field(default_factory=list)
@@ -116,14 +156,19 @@ class RuntimeStats:
         self._lock = threading.Lock()
 
     def bump(self, **deltas: int) -> None:
-        """Atomically add ``deltas`` to the named scalar counters."""
+        """Atomically add ``deltas`` to the named scalar counters.  One
+        call is one lock acquisition however many counters it carries —
+        the dispatch path coalesces every per-step delta into a single
+        ``bump`` at commit."""
         with self._lock:
+            self.locked_calls += 1
             for name, d in deltas.items():
                 setattr(self, name, getattr(self, name) + d)
 
     def log(self, name: str, value) -> None:
         """Atomically append ``value`` to the named history list."""
         with self._lock:
+            self.locked_calls += 1
             getattr(self, name).append(value)
 
     def snapshot(self) -> Dict[str, Any]:
@@ -226,7 +271,35 @@ class MorpheusRuntime:
         self._cache_ns = (self.engine.cfg.cache_ns
                          if self.engine.cfg.cache_ns is not None
                          else f"rt-{next(_NS_COUNTER)}")
+        # ---- seqlock'd dispatch state ----
+        # `_lock` + `_cond` protect the tiny claim/commit critical
+        # sections; the executable itself always runs with NO lock held.
+        # `_stepping` is the single in-flight step slot (state donation
+        # serializes steps per plane anyway); `_writers` counts writers
+        # waiting to quiesce (steps hold off so writers cannot starve);
+        # `_gen` is the generation counter every committed writer bumps —
+        # dispatch work prepared outside the lock (e.g. a fused
+        # executable fetched for the active plan) is validated against
+        # it at claim time and retried on mismatch.
         self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._gen = 0
+        self._stepping = False
+        self._writers = 0
+        self._step_seq = 0            # dispatch ordinal (sampling cadence)
+        self._window_seq = 0          # fused-window ordinal
+        self._fused_memo: Dict[Any, Callable] = {}   # gen-scoped, see
+                                                     # _fused_exec
+        # the most recent (batch structure, K) pairs step_many has
+        # served, as stacked avals: recompile cycles precompile fused
+        # executables for these alongside the single-step twins, so a
+        # swap (or deopt) never stalls a fused window on an inline XLA
+        # compile.  LRU-bounded — per-cycle precompile work (and
+        # time-to-swap) must not grow with every structure ever seen.
+        from collections import OrderedDict
+        self._fused_shapes: "OrderedDict[Any, Any]" = OrderedDict()
+        self._fused_shapes_cap = 8
+        self._warm_threads: List[threading.Thread] = []
         self._recompile_mutex = threading.Lock()
         self._compiling = False
         self._queued: List[tuple] = []
@@ -294,22 +367,75 @@ class MorpheusRuntime:
             state, plane_state_shardings(state, self.mesh,
                                          self.engine.cfg.instr_axes))
 
-    def _place_batch(self, batch):
-        """Shard a request batch's leading dim over the mesh (no-op
-        without one).  The sharding pytree is cached per batch
-        structure/shape — batch shapes are pinned by the AOT-compile
-        contract, so steady-state steps pay one dict probe, not a
-        tree_map of fresh NamedShardings."""
-        if self.mesh is None:
-            return batch
-        key = batch_key(batch)
+    def _batch_shardings(self, batch, stacked: bool):
+        """The (cached) per-leaf sharding pytree for a batch structure.
+        Batch shapes are pinned by the AOT-compile contract, so
+        steady-state steps pay one dict probe, not a tree_map of fresh
+        NamedShardings."""
+        key = (batch_key(batch), stacked)
         sh = self._batch_sh_cache.get(key)
         if sh is None:
             from ..distributed.sharding import plane_batch_shardings
             sh = plane_batch_shardings(batch, self.mesh,
-                                       self.engine.cfg.instr_axes)
+                                       self.engine.cfg.instr_axes,
+                                       stacked=stacked)
             self._batch_sh_cache[key] = sh
-        return jax.device_put(batch, sh)
+        return sh
+
+    @staticmethod
+    def _batch_resident(batch, sh) -> bool:
+        """True when every leaf is already a committed device array whose
+        sharding matches the target — re-placing it would be a wasted
+        transfer (and a wasted dispatch) every step."""
+        for leaf, want in zip(jax.tree.leaves(batch), jax.tree.leaves(sh)):
+            if not isinstance(leaf, jax.Array):
+                return False
+            have = leaf.sharding
+            if have == want:
+                continue
+            try:
+                if not have.is_equivalent_to(want, leaf.ndim):
+                    return False
+            except (AttributeError, TypeError):
+                return False
+        return True
+
+    def _place_batch(self, batch, *, stacked: bool = False,
+                     count: Optional[dict] = None):
+        """Shard a request batch over the mesh (no-op without one).
+        Arrays whose committed sharding already matches the target pass
+        through untouched — a batch placed once (or prefetched via
+        :meth:`place_batch`) is never re-``device_put`` on later steps.
+        ``stacked`` selects the fused-window layout (leading K axis
+        unsharded, per-step batch dim sharded).  ``count`` (a mutable
+        dict) receives a ``transfers`` delta instead of a locked stats
+        bump, so the dispatch path stays at one stats call per step."""
+        if self.mesh is None:
+            return batch
+        sh = self._batch_shardings(batch, stacked)
+        if self._batch_resident(batch, sh):
+            return batch
+        if count is not None:
+            count["transfers"] = count.get("transfers", 0) + 1
+        return _device_put(batch, sh)
+
+    def place_batch(self, batch, *, fused: bool = False):
+        """Public prefetch API: device-place ``batch`` ahead of dispatch
+        (non-blocking — ``device_put`` dispatches asynchronously), so a
+        pipelined serve loop overlaps the H2D of batch N+1 with the
+        compute of batch N.  With ``fused=True``, ``batch`` is a
+        *sequence* of K per-step batches: they are stacked along a
+        leading window axis and placed in the fused layout that
+        :meth:`step_many` consumes.  Already-resident arrays pass
+        through untouched, so prefetching — or re-stepping — the same
+        placed batch performs zero transfers."""
+        if fused and isinstance(batch, (list, tuple)):
+            batch = stack_batches(batch)
+        count: dict = {}
+        placed = self._place_batch(batch, stacked=fused, count=count)
+        if count:
+            self.stats.bump(batch_transfers=count["transfers"])
+        return placed
 
     # ---- executable cache --------------------------------------------
     @property
@@ -358,19 +484,23 @@ class MorpheusRuntime:
         return tuple(sorted(self.engine.instrumented_sites()))
 
     def _exec_key(self, plan: SpecializationPlan, batch,
-                  donate: bool, instr_struct: Tuple[str, ...]):
+                  donate: bool, instr_struct: Tuple[str, ...],
+                  fuse: Optional[int] = None):
         """Cache key for ``plan`` × ``batch`` structure × the instr
         structure the executable was lowered against: the plan's
         *signature* (version-free — behaviorally identical plans share
         one executable), or its full version-stamped ``key`` when
         ``EngineConfig.signature_cache`` is off (the version-keyed
         baseline benchmarks measure against).  ``donate=False`` is the
-        non-donating oracle twin."""
+        non-donating oracle twin; ``fuse=K`` is the ``lax.scan``-fused
+        K-step executable (K is part of the key — a fused window and a
+        single step never alias)."""
         pkey = (plan.signature if self.engine.cfg.signature_cache
                 else plan.key)
         return ExecutableCache.make_key(self._cache_ns,
                                         (pkey, instr_struct),
-                                        batch_key(batch), donate)
+                                        batch_key(batch), donate,
+                                        fuse=fuse)
 
     def _get_oracle(self, batch) -> Tuple[Callable, Tuple[str, ...]]:
         """Fetch (or compile) the non-donating ``run_generic`` oracle
@@ -394,7 +524,8 @@ class MorpheusRuntime:
                                                     bool]],
                             batch, *, state: PlaneState,
                             instr_struct: Tuple[str, ...],
-                            serving: bool = True) -> List[Callable]:
+                            serving: bool = True,
+                            fuse: Optional[int] = None) -> List[Callable]:
         """Compile every ``(plan, donate)`` pair against ``state``'s
         avals and insert it into the cache.  Two or more pairs compile
         concurrently — one thread per executable; XLA compilation
@@ -410,11 +541,13 @@ class MorpheusRuntime:
         results: List[Any] = [None] * len(plans)
 
         def compile_one(i: int, plan: SpecializationPlan, donate: bool):
-            key = self._exec_key(plan, batch, donate, instr_struct)
+            key = self._exec_key(plan, batch, donate, instr_struct,
+                                 fuse=fuse)
             try:
                 results[i] = ("ok", self.exec_cache.get_or_compile(
                     key, lambda: self.engine.compile(
-                        plan, self.params, state, batch, donate=donate)))
+                        plan, self.params, state, batch, donate=donate,
+                        fuse=fuse)))
             except BaseException as e:          # re-raised on the caller
                 results[i] = ("err", e)
 
@@ -444,43 +577,327 @@ class MorpheusRuntime:
             out.append(compiled)
         return out
 
+    # ---- the seqlock protocol ----------------------------------------
+    @contextlib.contextmanager
+    def _write(self, bump_gen: bool = True):
+        """Writer side of the dispatch seqlock: quiesce the in-flight
+        step (the state's buffers are being donated while one runs),
+        mutate ``_active``/``state`` under the lock, and bump the
+        generation counter so dispatch work prepared against the old
+        world revalidates.  Writers take precedence over new steps
+        (steps wait while ``_writers`` is nonzero), so a busy data plane
+        cannot starve the control plane.  ``bump_gen=False`` is the
+        read-mostly variant (e.g. the :meth:`run_generic` oracle, which
+        must only keep the state un-donated while it reads it)."""
+        with self._cond:
+            self._writers += 1
+            try:
+                while self._stepping:
+                    self._cond.wait()
+                yield
+                if bump_gen:
+                    # clear BEFORE bumping: a lock-free step_many reader
+                    # that observes the new generation must already see
+                    # the memo empty — the reverse order would let it
+                    # pass claim validation holding a stale executable
+                    # compiled for the old state structure
+                    self._fused_memo = {}
+                    self._gen += 1
+            finally:
+                self._writers -= 1
+                self._cond.notify_all()
+
+    def _begin_step(self, expect_gen: Optional[int] = None):
+        """Claim the single in-flight step slot (brief critical
+        section).  Returns ``(gen, active_tuple, state)``, or None when
+        ``expect_gen`` no longer matches — the validated part of the
+        protocol: work prepared outside the lock (a fused executable
+        fetched for the active plan) is only committed to if no writer
+        landed in between; otherwise the caller retries."""
+        with self._cond:
+            while self._stepping or self._writers:
+                self._cond.wait()
+            if expect_gen is not None and self._gen != expect_gen:
+                return None
+            self._stepping = True
+            self._step_seq += 1
+            return self._gen, self._active, self.state
+
+    def _abort_step(self) -> None:
+        """Release the step slot without committing (executable raised —
+        the state may be half-donated, exactly as a mid-step crash under
+        the old step-wide mutex).  Control updates queued while the
+        failed step was in flight still drain here: leaving them queued
+        would let a *later* direct update apply first and then be
+        overwritten by the stale replay at the next commit — the FIFO
+        invariant must hold on the failure path too."""
+        notify = False
+        with self._cond:
+            if self._queued and not self._compiling:
+                queued, self._queued = self._queued, []
+                for (name, fields, n_valid) in queued:
+                    self._apply_update_locked(name, fields, n_valid)
+                # clear BEFORE bumping (same ordering rule as _write)
+                self._fused_memo = {}
+                self._gen += 1
+                notify = True
+            self._stepping = False
+            self._cond.notify_all()
+        if notify:
+            self.controller.notify_update(self)
+
+    def _commit_step(self, gen: int, new_state: PlaneState,
+                     publish: bool, deltas: Dict[str, int]):
+        """Commit one step's fresh state (brief critical section): a
+        validated store — writers quiesce on in-flight steps, so the
+        generation cannot have moved since the claim.  Control updates
+        queued while the step (or fused window) was executing are
+        drained here, *before* the next dispatch can claim: the device
+        tables are fresh and the program guard deopts the next
+        step/window (§4.4 at window granularity).  All stats for the
+        step coalesce into ONE locked ``bump``."""
+        notify = False
+        with self._cond:
+            assert self._gen == gen, "writer landed during in-flight step"
+            self.state = new_state
+            if publish and new_state.instr:
+                # publish the freshly recorded sketches to the back
+                # buffer: a device-side copy, dispatch-only — the t1
+                # readout then never needs this lock
+                self._backbuf.publish(new_state.instr)
+            if self._queued and not self._compiling:
+                queued, self._queued = self._queued, []
+                for (name, fields, n_valid) in queued:
+                    self._apply_update_locked(name, fields, n_valid)
+                # clear BEFORE bumping (same ordering rule as _write)
+                self._fused_memo = {}
+                self._gen += 1
+                notify = True
+            self._stepping = False
+            self._cond.notify_all()
+        self.stats.bump(**deltas)
+        if notify:
+            self.controller.notify_update(self)
+
     # ---- the data plane entry point ----------------------------------
     def step(self, batch):
         """Run one serving step; returns the user output.  Dispatch is
         the paper's three-way choice: deopt to generic when the program
         guard trips, the instrumented twin on sampled steps (cadence set
         by the controller's per-plane sampling state machine), else the
-        specialized executable."""
-        self.stats.bump(steps=1)
-        batch = self._place_batch(batch)
-        # dispatch + execute + commit in ONE critical section: the
-        # recompile thread replaces the (plan, exec, instr_exec,
-        # generic_exec) tuple AND resets self.state under this lock, so
-        # reading both inside it is what guarantees the executable runs
-        # against a state whose structure it was compiled for — and that
-        # nobody reads or replaces self.state between dispatch and the
-        # commit of the fresh state (the executable donates its buffers).
-        with self._lock:
-            plan, spec_exec, instr_exec, generic_exec = self._active
-            sampled = False
-            # program-level guard: ONE host compare covers every RO table
-            if self.tables.version != plan.version:
-                exec_ = generic_exec
-                self.stats.bump(deopt_steps=1)
-            elif (self.enable
-                  and self.sampler.should_sample(self.stats.steps)):
-                exec_ = instr_exec
-                sampled = True
-                self.stats.bump(instr_steps=1)
-            else:
-                exec_ = spec_exec
-            out, self.state = exec_(self.params, self.state, batch)
-            if sampled and self.state.instr:
-                # publish the freshly recorded sketches to the back
-                # buffer: a device-side copy, dispatch-only — the t1
-                # readout then never needs this lock
-                self._backbuf.publish(self.state.instr)
+        specialized executable.
+
+        The executable runs with NO lock held: the claim/commit pair
+        brackets it with two brief critical sections (see module
+        docstring), so the control plane and other planes' recompiles
+        never serialize behind device execution."""
+        cnt: dict = {}
+        batch = self._place_batch(batch, count=cnt)
+        gen, active, state = self._begin_step()
+        plan, spec_exec, instr_exec, generic_exec = active
+        sampled = False
+        deltas = {"steps": 1}
+        if cnt:
+            deltas["batch_transfers"] = cnt["transfers"]
+        # program-level guard: ONE host compare covers every RO table
+        if self.tables.version != plan.version:
+            exec_ = generic_exec
+            deltas["deopt_steps"] = 1
+        elif self.enable and self.sampler.should_sample(self._step_seq):
+            exec_ = instr_exec
+            sampled = True
+            deltas["instr_steps"] = 1
+        else:
+            exec_ = spec_exec
+        try:
+            out, new_state = exec_(self.params, state, batch)
+        except BaseException:
+            self._abort_step()
+            raise
+        self._commit_step(gen, new_state, sampled, deltas)
         return out
+
+    def step_many(self, batches, k: Optional[int] = None):
+        """Run a fused window of K serving steps through ONE
+        ``lax.scan``-fused executable; returns the stacked outputs
+        (leading axis K).  ``batches`` is a sequence of K same-shaped
+        batches, or a pre-stacked/pre-placed pytree from
+        :meth:`place_batch` (``fused=True``) — in the pre-stacked case
+        ``k`` is REQUIRED and validated against every leaf's leading
+        axis: a plain per-step batch is indistinguishable from a stacked
+        window by shape alone, and silently scanning over the batch
+        dimension would serve wrong outputs without an error.
+
+        This is the steady-state fast path: one Python dispatch, one
+        claim/commit pair and one locked stats update amortize over K
+        steps.  The program guard and the sampling decision are hoisted
+        to window granularity — the whole window runs specialized,
+        instrumented, or (guard tripped) generic; a control update
+        landing mid-window is queued and drained at the window's commit,
+        so the *next* window deopts (§4.4 semantics at window
+        granularity, byte-identical outputs to K=1 stepping)."""
+        if isinstance(batches, (list, tuple)):
+            if k is not None and k != len(batches):
+                raise ValueError(
+                    f"step_many: k={k} but {len(batches)} batches given")
+            k = len(batches)
+            stacked = stack_batches(batches)
+        else:
+            if k is None:
+                raise TypeError(
+                    "step_many(stacked_pytree) needs an explicit k= "
+                    "(window size): pass the sequence of per-step "
+                    "batches instead, or the output of "
+                    "place_batch(batches, fused=True) together with "
+                    "k=len(batches)")
+            stacked = batches
+            lead = {int(leaf.shape[0])
+                    for leaf in jax.tree.leaves(stacked)}
+            if lead != {k}:
+                raise ValueError(
+                    f"step_many: leading axes {sorted(lead)} do not "
+                    f"match the window size k={k}")
+        if k == 1:
+            # no fusion to amortize: run the single-step path and
+            # restack so the output contract stays (K, ...)
+            out = self.step(jax.tree.map(lambda x: x[0], stacked))
+            return jax.tree.map(lambda x: jnp.asarray(x)[None], out)
+        cnt: dict = {}
+        stacked = self._place_batch(stacked, stacked=True, count=cnt)
+        with self._cond:
+            # the window ordinal drives the sampling cadence: increment
+            # under the lock — concurrent step_many callers must never
+            # observe (and both instrument) the same ordinal
+            self._window_seq += 1
+            window = self._window_seq
+        while True:
+            # prepare OUTSIDE any lock: read the active world, pick the
+            # window's role, and fetch (possibly compile) its fused
+            # executable — then claim with generation validation and
+            # retry if a writer landed in between.
+            gen = self._gen
+            plan = self._active[0]
+            isites = self._active_isites
+            deltas = {"steps": k}
+            if cnt:
+                deltas["batch_transfers"] = cnt["transfers"]
+            sampled = False
+            if self.tables.version != plan.version:
+                role_plan = self.generic_plan
+                deltas["deopt_steps"] = k
+            elif (self.enable and self.sampler.should_sample_window(
+                    window, k)):
+                role_plan = self._instr_twin(plan, isites)
+                sampled = True
+                deltas["instr_steps"] = k
+            else:
+                role_plan = plan
+            fexec, mkey = self._fused_exec(role_plan, stacked, isites, k)
+            claim = self._begin_step(expect_gen=gen)
+            if claim is not None:
+                break
+        gen, _, state = claim
+        # memoize only now: the claim validated the generation and
+        # writers are quiesced while ``_stepping`` is held, so the entry
+        # provably belongs to the current world (a stale executable in
+        # the memo would donate a state structure it was not compiled
+        # for)
+        self._fused_memo[mkey] = fexec
+        try:
+            out, new_state = fexec(self.params, state, stacked)
+        except BaseException:
+            self._abort_step()
+            raise
+        self._commit_step(gen, new_state, sampled, deltas)
+        return out
+
+    def _register_fused_shape(self, bkey, k: int, stacked) -> None:
+        """First sight of a (window structure, K): record its stacked
+        avals (recompile cycles precompile fused executables for every
+        registered structure) and warm the fused generic deopt target in
+        the background — the first guard-tripped window after a control
+        update must swap to generic without paying t2, same as the
+        single-step path's precompiled deopt target.  Called only on the
+        fused slow lane (memo miss), never on the steady path."""
+        warm = None
+        with self._cond:         # the recompile thread iterates this map
+            if (bkey, k) in self._fused_shapes:
+                self._fused_shapes.move_to_end((bkey, k))
+            else:
+                self._fused_shapes[(bkey, k)] = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                    stacked)
+                while len(self._fused_shapes) > self._fused_shapes_cap:
+                    self._fused_shapes.popitem(last=False)
+                warm = threading.Thread(
+                    target=self._warm_fused_generic,
+                    args=(self._fused_shapes[(bkey, k)], k),
+                    name="morpheus-warm-fused", daemon=True)
+                # prune finished warms so the list stays bounded over a
+                # long-lived server's lifetime; close() joins the rest
+                self._warm_threads = [t for t in self._warm_threads
+                                      if t.is_alive()]
+                self._warm_threads.append(warm)
+        if warm is not None:
+            warm.start()
+
+    def _warm_fused_generic(self, avals, k: int) -> None:
+        """Background warm of the fused generic executable for a newly
+        seen (batch structure, K): compiled through the shared cache's
+        in-flight dedup, kept out of the serving counters (it is
+        insurance, not a Morpheus cycle).  Best-effort — a failure here
+        just means the first deopt window pays the compile inline."""
+        try:
+            isites = self._active_isites
+            key = self._exec_key(self.generic_plan, avals,
+                                 self.engine.cfg.donate, isites, fuse=k)
+            if self.exec_cache.peek(key) is None:
+                self._compile_into_cache(
+                    [(self.generic_plan, self.engine.cfg.donate)], avals,
+                    state=self.state.replace(
+                        instr=self.engine.init_instr_state(isites)),
+                    instr_struct=isites, serving=False, fuse=k)
+        except Exception:
+            pass
+
+    def _fused_exec(self, plan: SpecializationPlan, stacked,
+                    instr_struct: Tuple[str, ...], k: int
+                    ) -> Tuple[Callable, Any]:
+        """Fetch (or compile) the K-step fused executable for ``plan``;
+        returns ``(exe, memo_key)``.  The steady-state window pays one
+        plain dict probe — no cache lock, no stats lock; the memo is
+        invalidated by every committed writer (``_write`` clears it), so
+        a swap or control update forces a re-probe of the shared
+        :class:`ExecutableCache` (and a compile on a genuine miss,
+        outside any lock).  The *caller* publishes to the memo after a
+        validated claim — never here, where a racing writer could let a
+        stale executable outlive its generation."""
+        bkey = batch_key(stacked)
+        mkey = (plan.signature, bkey, k)
+        exe = self._fused_memo.get(mkey)
+        if exe is not None:
+            return exe, mkey
+        # memo miss (first window, or a writer just landed): the slow
+        # lane — also the right moment to register the window structure
+        # for swap-time precompile + the background generic-deopt warm,
+        # keeping that bookkeeping entirely OFF the steady path
+        self._register_fused_shape(bkey, k, stacked)
+        donate = self.engine.cfg.donate
+        key = self._exec_key(plan, stacked, donate, instr_struct, fuse=k)
+        exe = self.exec_cache.probe(key)
+        if exe is None:
+            # compile against the canonical state structure for this
+            # instr snapshot (same discipline as _get_many): the key,
+            # the lowering avals and the swap's state reset must all
+            # derive from the same site tuple
+            state = self.state.replace(
+                instr=self.engine.init_instr_state(instr_struct))
+            exe = self._compile_into_cache(
+                [(plan, donate)], stacked, state=state,
+                instr_struct=instr_struct, fuse=k)[0]
+        else:
+            self.stats.bump(cache_hits=1)
+        return exe, mkey
 
     def run_generic(self, batch):
         """Replay ``batch`` through the generic plan WITHOUT committing
@@ -495,7 +912,10 @@ class MorpheusRuntime:
         batch = self._place_batch(batch)
         for _ in range(4):
             oracle, instr_struct = self._get_oracle(batch)
-            with self._lock:
+            # write-side of the seqlock WITHOUT a generation bump: the
+            # oracle mutates nothing, but the live state must not be
+            # donated out from under it mid-read
+            with self._write(bump_gen=False):
                 if tuple(sorted(self.state.instr.keys())) == instr_struct:
                     out, _ = oracle(self.params, self.state, batch)
                     return out
@@ -550,29 +970,40 @@ class MorpheusRuntime:
 
     def control_update(self, name: str, fields, n_valid=None) -> None:
         """Control-plane table write.  Queued while a compile is in
-        flight (§4.4), else applied now; either way the device copy is
-        refreshed, the program guard deopts specialized executables
+        flight (§4.4) — or while a step/fused window is executing, so
+        the control plane never blocks behind device execution; queued
+        updates drain in FIFO order at the window's commit (or the
+        recompile's replay), the device copy is refreshed before the
+        next dispatch, the program guard deopts specialized executables
         until the next recompile, and the controller re-arms this
         plane's instrumentation sampling."""
-        with self._lock:
-            if self._compiling:
+        with self._cond:
+            if self._compiling or self._stepping:
                 self._queued.append((name, fields, n_valid))
                 self.stats.bump(queued_updates=1)
                 return
         self._apply_update(name, fields, n_valid)
 
-    def _apply_update(self, name, fields, n_valid):
+    def _apply_update_locked(self, name, fields, n_valid):
+        """Apply one control update with the runtime lock held and no
+        step in flight (callers: :meth:`_apply_update` via the write
+        side, :meth:`_commit_step`'s drain): host TableSet write +
+        version bump, then refresh the device copy so the very next
+        dispatch serves the new contents (through the generic
+        executable — the guard now trips)."""
         self.tables.control_update(name, fields, n_valid)
-        # refresh device copy of that table; program guard now deopts
-        with self._lock:
-            tables = dict(self.state.tables)
-            tables[name] = self.tables[name].device_arrays()
-            if self.mesh is not None:
-                from jax.sharding import NamedSharding, PartitionSpec
-                tables[name] = jax.device_put(
-                    tables[name],
-                    NamedSharding(self.mesh, PartitionSpec()))
-            self.state = self.state.replace(tables=tables)
+        tables = dict(self.state.tables)
+        tables[name] = self.tables[name].device_arrays()
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            tables[name] = _device_put(
+                tables[name],
+                NamedSharding(self.mesh, PartitionSpec()))
+        self.state = self.state.replace(tables=tables)
+
+    def _apply_update(self, name, fields, n_valid):
+        with self._write():
+            self._apply_update_locked(name, fields, n_valid)
         # re-arm sampling + refresh the t1 snapshot off-thread
         self.controller.notify_update(self)
 
@@ -609,7 +1040,8 @@ class MorpheusRuntime:
         return float(staleness * traffic)
 
     def _get_many(self, plans: List[SpecializationPlan], batch,
-                  instr_struct: Tuple[str, ...]) -> List[Callable]:
+                  instr_struct: Tuple[str, ...],
+                  fuse: Optional[int] = None) -> List[Callable]:
         """Fetch one serving executable per plan, deduplicating by cache
         key and compiling ALL misses concurrently in one batch (one
         thread per missing executable; XLA compilation releases the
@@ -622,7 +1054,7 @@ class MorpheusRuntime:
         control update moving ``n_valid`` across the inline threshold
         cannot mis-key an executable mid-cycle."""
         donate = self.engine.cfg.donate
-        keys = [self._exec_key(p, batch, donate, instr_struct)
+        keys = [self._exec_key(p, batch, donate, instr_struct, fuse=fuse)
                 for p in plans]
         found: Dict[Any, Callable] = {}
         missing: List[Tuple[Any, SpecializationPlan]] = []
@@ -642,7 +1074,7 @@ class MorpheusRuntime:
                 instr=self.engine.init_instr_state(instr_struct))
             compiled = self._compile_into_cache(
                 [(p, donate) for _, p in missing], batch, state=state,
-                instr_struct=instr_struct)
+                instr_struct=instr_struct, fuse=fuse)
             for (k, _), exe in zip(missing, compiled):
                 found[k] = exe
         return [found[k] for k in keys]
@@ -674,7 +1106,7 @@ class MorpheusRuntime:
             return self._recompile_cycle()
 
     def _recompile_cycle(self) -> dict:
-        with self._lock:
+        with self._cond:
             self._compiling = True
         try:
             # t1: versioned snapshot handoff (copied on the worker
@@ -726,7 +1158,7 @@ class MorpheusRuntime:
                 # tracking.
                 fresh_instr, fresh_guards = \
                     self._fresh_instr_guards(isites)
-                with self._lock:
+                with self._write():
                     self._active = (
                         dataclasses.replace(active_plan,
                                             version=plan.version),
@@ -750,6 +1182,18 @@ class MorpheusRuntime:
                 wanted += [self.generic_plan,
                            self._instr_twin(self.generic_plan, isites)]
             execs = self._get_many(wanted, self._example_batch, isites)
+            # precompile the fused variants for every window structure
+            # step_many has served (specialized + twin, and the generic
+            # deopt target on a topology change): still on the recompile
+            # thread, concurrently per miss — a post-swap fused window
+            # must hit the cache, not stall serving on an inline t2
+            with self._cond:     # step_many registers entries under it
+                fused_shapes = list(self._fused_shapes.items())
+            for (bk, k), avals in fused_shapes:
+                fused_wanted = [plan, self._instr_twin(plan, isites)]
+                if isites != self._active_isites:
+                    fused_wanted.append(self.generic_plan)
+                self._get_many(fused_wanted, avals, isites, fuse=k)
             new_exec, new_instr_exec = execs[0], execs[1]
             new_generic = (execs[2] if len(execs) > 2
                            else active_generic)
@@ -761,9 +1205,11 @@ class MorpheusRuntime:
             fresh_instr, fresh_guards = self._fresh_instr_guards(isites)
             self._backbuf.publish(fresh_instr)
             t0 = time.time()
-            with self._lock:
+            with self._write():
                 # ATOMIC swap (the BPF_PROG_ARRAY pointer update): one
-                # reference assignment replaces the whole tuple
+                # reference assignment replaces the whole tuple — after
+                # quiescing the in-flight step, since the state reset
+                # below retires a (possibly half-donated) PlaneState
                 self._active = (plan, new_exec, new_instr_exec,
                                 new_generic)
                 self.generic_instr_exec = new_generic_instr
@@ -790,7 +1236,7 @@ class MorpheusRuntime:
             # concurrent one.  Runs on the failure path too — a recompile
             # that died (e.g. closed runtime) must not strand updates.
             while True:
-                with self._lock:
+                with self._cond:
                     queued, self._queued = self._queued, []
                     if not queued:
                         self._compiling = False
@@ -816,6 +1262,10 @@ class MorpheusRuntime:
         # the GC-time safety net is no longer needed — and must not fire
         # later against a new plane registered under this plane_id
         self._finalizer.detach()
+        # let in-flight fused-generic warms finish: they compile against
+        # this runtime's state/cache and must not outlive the teardown
+        for t in self._warm_threads:
+            t.join(timeout=60.0)
         if self._private_controller:
             self.controller.close()
         else:

@@ -145,18 +145,24 @@ def plane_state_shardings(state, mesh: Mesh,
 
 
 def plane_batch_shardings(batch, mesh: Mesh,
-                          axes: Tuple[str, ...] = ("data",)):
+                          axes: Tuple[str, ...] = ("data",),
+                          stacked: bool = False):
     """Request-batch placement for the serving data plane: leading
     (batch) dim sharded over ``axes`` when divisible, scalars and
-    indivisible leaves replicated."""
+    indivisible leaves replicated.  With ``stacked=True`` (fused K-step
+    windows) each leaf carries a leading window axis that stays
+    *unsharded* — it is the ``lax.scan`` loop dim — and the per-step
+    batch dim underneath it gets the ``axes`` placement."""
     n = 1
     for a in axes:
         n *= mesh.shape[a]
+    d = 1 if stacked else 0
+    lead = (None,) * d
 
     def f(x):
         shape = getattr(x, "shape", ())
-        if len(shape) >= 1 and shape[0] % n == 0:
-            return NamedSharding(mesh, P(tuple(axes)))
+        if len(shape) >= d + 1 and shape[d] % n == 0:
+            return NamedSharding(mesh, P(*lead, tuple(axes)))
         return NamedSharding(mesh, P())
 
     return jax.tree.map(f, batch)

@@ -5,6 +5,18 @@
     python -m repro.launch.serve --steps 200 --mesh auto     # sharded
     python -m repro.launch.serve --steps 200 --planes 4      # one
                                  # controller driving 4 data planes
+    python -m repro.launch.serve --steps 512 --fuse 8 --inflight 4
+                                 # fused windows + pipelined loop
+
+The serve loop is **pipelined**: instead of `block_until_ready` after
+every step, up to ``--inflight`` dispatched steps stay in flight (JAX
+async dispatch) and the loop prefetches the next batch's H2D transfer
+(`runtime.place_batch`) while the current one computes.  ``--fuse K``
+dispatches K-step ``lax.scan``-fused windows (`runtime.step_many`),
+amortizing the per-step Python dispatch K-fold — the steady-state
+dispatch fast path (see docs/ARCHITECTURE.md "Dispatch fast path" and
+``benchmarks/bench_dispatch.py``).  The defaults (``--fuse 1
+--inflight 1``) reproduce the classic block-per-step loop.
 
 With ``--mesh auto`` (the default) the runtime spans every local device
 as a 1-D ``("data",)`` mesh: batches and instrumentation sketches are
@@ -34,7 +46,8 @@ from ..core import ControllerConfig, EngineConfig, MorpheusController, \
     MorpheusRuntime, SketchConfig
 from ..distributed.meshctx import data_plane_mesh
 from ..serving import ServeConfig, build_fleet, build_params, \
-    build_tables, make_request_batch, make_serve_step
+    build_tables, make_request_batch, make_request_windows, \
+    make_serve_step
 
 
 def _skewed_params(cfg: ServeConfig, key, skew_router: bool):
@@ -50,17 +63,82 @@ def _skewed_params(cfg: ServeConfig, key, skew_router: bool):
     return params
 
 
+def _make_drain(pending, lat):
+    """The bounded-in-flight drain shared by both serve loops: block on
+    the oldest dispatched units until at most ``limit`` remain,
+    recording each unit's dispatch->ready latency."""
+    def drain(limit: int) -> None:
+        while len(pending) > limit:
+            t0, out = pending.popleft()
+            jax.block_until_ready(out)
+            lat.append(time.time() - t0)
+    return drain
+
+
+def _drive_pipelined(step_one, make_batch, place, steps, fuse, inflight,
+                     on_boundary=None):
+    """The single-plane bounded-in-flight pipelined serve loop (the
+    fleet driver interleaves its planes through the same
+    pending/:func:`_make_drain` pattern inline): dispatch up to
+    ``inflight`` units (steps, or K-step fused windows) before blocking
+    on the oldest, prefetching the next unit's batch placement while the
+    current one computes.  ``step_one(placed)`` dispatches and returns
+    the output; ``make_batch(i)`` builds the i-th per-step batch;
+    ``place(raw)`` stacks/places one unit's worth of batches;
+    ``on_boundary(i, drain)`` fires after every dispatched unit (with
+    the drain handle, so a real boundary can quiesce the pipeline before
+    timing control-plane work).  Returns
+    ``(wall_s, unit_latencies, steps_served)`` — steps_served rounds
+    ``steps`` up to a whole number of windows, and each latency spans
+    dispatch -> ready (at depth > 1 that includes queueing behind
+    earlier units — throughput is the headline number for pipelined
+    runs).  Batch generation/placement for unit N+1 runs between unit
+    N's dispatch and its drain, so it overlaps the device compute at
+    every pipeline depth."""
+    from collections import deque
+    pending: deque = deque()
+    lat = []
+    drain = _make_drain(pending, lat)
+
+    def prep(i0):
+        return place([make_batch(i0 + j) for j in range(fuse)])
+
+    t_start = time.time()
+    nxt = prep(0)
+    i = 0
+    while i < steps:
+        unit = nxt
+        t0 = time.time()
+        out = step_one(unit)
+        pending.append((t0, out))
+        i += fuse
+        if i < steps:
+            # overlap the NEXT unit's H2D with this unit's compute
+            nxt = prep(i)
+        drain(inflight - 1)
+        if on_boundary is not None:
+            # the callback gets the drain handle so a recompile boundary
+            # can quiesce the pipeline BEFORE timing control-plane work —
+            # otherwise in-flight windows overlap the recompile and the
+            # subtracted time double-counts serving
+            on_boundary(i, drain)
+    drain(0)
+    return time.time() - t_start, lat, i
+
+
 def run_serve(steps=200, locality="high", morpheus=True,
               recompile_every=50, batch_size=8, skew_router=True,
               quiet=False, serve_cfg=None, features=None, mesh="auto",
-              xla_cache_dir=None):
+              xla_cache_dir=None, fuse=1, inflight=1):
     """Drive the serving data plane for ``steps`` batches and return
     ``(stats, runtime)``.  ``mesh`` is "auto" (span all local devices,
     or single-device when there is only one), "none" (force
     single-device), or a prebuilt ``jax.sharding.Mesh``.
     ``xla_cache_dir`` points JAX's persistent compilation cache at a
     directory so warm restarts skip ``t2`` for every executable a
-    previous process already built."""
+    previous process already built.  ``fuse=K`` serves K-step fused
+    windows through ``runtime.step_many``; ``inflight=N`` keeps up to N
+    dispatched units in flight instead of blocking per step."""
     cfg = serve_cfg or ServeConfig()
     key = jax.random.PRNGKey(0)
     params = _skewed_params(cfg, key, skew_router)
@@ -82,27 +160,47 @@ def run_serve(steps=200, locality="high", morpheus=True,
                          make_request_batch(cfg, key, batch_size),
                          cfg=ecfg, enable=morpheus)
 
-    t_start = time.time()
-    lat = []
-    for i in range(steps):
-        batch = make_request_batch(cfg, jax.random.PRNGKey(i), batch_size,
-                                   locality=locality)
-        t0 = time.time()
-        out = rt.step(batch)
-        jax.block_until_ready(out)
-        lat.append(time.time() - t0)
-        if morpheus and (i + 1) % recompile_every == 0:
-            info = rt.recompile(block=True)
-            if not quiet:
-                print(f"[serve] recompile@{i+1}: {info['plan']} "
-                      f"t1={info['t1']*1e3:.0f}ms sites={info['n_sites']} "
-                      f"hot_experts={rt.hot_experts()}", flush=True)
-    wall = time.time() - t_start
-    lat = np.array(lat)
+    def make_batch(i):
+        return make_request_batch(cfg, jax.random.PRNGKey(i), batch_size,
+                                  locality=locality)
+
+    def place(raw):
+        return (rt.place_batch(raw, fused=True) if fuse > 1
+                else rt.place_batch(raw[0]))
+
+    def step_one(unit):
+        return rt.step_many(unit, k=fuse) if fuse > 1 else rt.step(unit)
+
+    boundary = {"last": 0, "spent": 0.0}
+
+    def on_boundary(i, drain):
+        if not morpheus or i // recompile_every <= boundary["last"]:
+            return
+        boundary["last"] = i // recompile_every
+        drain(0)              # quiesce: in-flight windows are serving
+        t0 = time.time()      # time, not recompile time
+        info = rt.recompile(block=True)
+        boundary["spent"] += time.time() - t0
+        if not quiet:
+            print(f"[serve] recompile@{i}: {info['plan']} "
+                  f"t1={info['t1']*1e3:.0f}ms sites={info['n_sites']} "
+                  f"hot_experts={rt.hot_experts()}", flush=True)
+
+    wall, lat, served = _drive_pipelined(
+        step_one, make_batch, place, steps, fuse, inflight, on_boundary)
+    # net serving time: recompile boundaries are not serving work.
+    # Batch generation is NOT subtracted here — _drive_pipelined preps
+    # the next unit between dispatch and drain, so that host time
+    # overlaps async device compute at every depth (subtracting it
+    # would credit time the pipeline already hid).
+    serve_wall = max(wall - boundary["spent"], 1e-9)
+    lat = np.array(lat) / fuse          # per-step latencies
     stats = {
-        "steps": steps,
+        "steps": served,
         "n_devices": n_dev,
-        "req_per_s": steps * batch_size / lat.sum(),
+        "fuse": fuse,
+        "inflight": inflight,
+        "req_per_s": served * batch_size / serve_wall,
         "p50_ms": float(np.percentile(lat, 50) * 1e3),
         "p99_ms": float(np.percentile(lat, 99) * 1e3),
         "wall_s": wall,
@@ -111,7 +209,7 @@ def run_serve(steps=200, locality="high", morpheus=True,
     }
     if not quiet:
         print(f"[serve] locality={locality} morpheus={morpheus} "
-              f"devices={n_dev} "
+              f"devices={n_dev} fuse={fuse} inflight={inflight} "
               f"{stats['req_per_s']:.1f} req/s p50={stats['p50_ms']:.1f}ms "
               f"p99={stats['p99_ms']:.1f}ms deopt={rt.stats.deopt_steps} "
               f"instr={rt.stats.instr_steps} "
@@ -124,7 +222,8 @@ def run_serve(steps=200, locality="high", morpheus=True,
 def run_controller_serve(planes=2, steps=200, locality="high",
                          recompile_every=50, batch_size=8,
                          skew_router=True, quiet=False, serve_cfg=None,
-                         workers=2, mesh="auto", xla_cache_dir=None):
+                         workers=2, mesh="auto", xla_cache_dir=None,
+                         fuse=1, inflight=1):
     """One :class:`MorpheusController` driving ``planes`` data planes
     (distinct TableSets, per-plane traffic skew) from one process.
     Recompiles go through the controller's bounded worker pool
@@ -161,34 +260,63 @@ def run_controller_serve(planes=2, steps=200, locality="high",
             make_request_batch(cfg, key, batch_size),
             cfg=ecfg, controller=controller, plane_id=f"plane-{p}"))
 
+    from collections import deque
     t_start = time.time()
+    cycle_spent = 0.0
     lat = []
-    for i in range(steps):
+    pending: deque = deque()
+    drain = _make_drain(pending, lat)
+
+    i = 0
+    prep_s = 0.0
+    while i < steps:
         for p, rt in enumerate(rts):
             # each plane sees its own traffic skew (hot_offset) — the
-            # controller must keep their plans independent
-            batch = make_request_batch(
-                cfg, jax.random.PRNGKey(1000 * p + i), batch_size,
-                locality=locality, hot_offset=7 * p)
+            # controller must keep their plans independent.  With
+            # inflight > 1 the planes' dispatches overlap on device:
+            # plane p+1's window launches while plane p's still runs.
             t0 = time.time()
-            jax.block_until_ready(rt.step(batch))
-            lat.append(time.time() - t0)
-        if (i + 1) % recompile_every == 0:
+            raw = make_request_windows(
+                cfg, jax.random.PRNGKey(1000 * p + i), fuse, batch_size,
+                locality=locality, hot_offset=7 * p)
+            placed = (rt.place_batch(raw, fused=True) if fuse > 1
+                      else rt.place_batch(raw[0]))
+            prep_s += time.time() - t0
+            t0 = time.time()
+            out = (rt.step_many(placed, k=fuse) if fuse > 1
+                   else rt.step(placed))
+            pending.append((t0, out))
+            drain(inflight - 1)
+        i += fuse
+        if (i // recompile_every) > ((i - fuse) // recompile_every):
+            drain(0)
+            t0 = time.time()
             n = controller.schedule_all()
             controller.drain()
+            cycle_spent += time.time() - t0
             if not quiet:
                 duty = {pid: f"{s['duty_cycle']:.2f}" for pid, s in
                         controller.stats().sampling.items()}
-                print(f"[serve] cycle@{i+1}: scheduled={n} "
+                print(f"[serve] cycle@{i}: scheduled={n} "
                       f"duty={duty}", flush=True)
+    drain(0)
     wall = time.time() - t_start
-    lat = np.array(lat)
+    served = i
+    # net of controller cycles, and of batch generation only when it
+    # serializes with serving (inflight == 1) — matching run_serve
+    serve_wall = max(wall - cycle_spent
+                     - (prep_s if inflight == 1 else 0.0), 1e-9)
+    lat = np.array(lat) / fuse
     cstats = controller.stats()
     stats = {
         "planes": planes,
         "n_devices": mesh.size if mesh is not None else 1,
-        "steps": steps,
-        "req_per_s": steps * planes * batch_size / lat.sum(),
+        "steps": served,
+        "fuse": fuse,
+        "inflight": inflight,
+        # wall-clock throughput net of controller cycle time: summed
+        # per-unit latencies would double-count overlap under inflight>1
+        "req_per_s": served * planes * batch_size / serve_wall,
         "p50_ms": float(np.percentile(lat, 50) * 1e3),
         "p99_ms": float(np.percentile(lat, 99) * 1e3),
         "wall_s": wall,
@@ -241,7 +369,19 @@ def main(argv=None) -> int:
                     help="persistent XLA compilation cache directory — "
                          "warm restarts skip t2 for executables already "
                          "built by a previous process")
+    ap.add_argument("--fuse", type=int, default=1, metavar="K",
+                    help="serve K-step lax.scan-fused windows "
+                         "(runtime.step_many) — one Python dispatch per "
+                         "K steps")
+    ap.add_argument("--inflight", type=int, default=1, metavar="N",
+                    help="bounded-in-flight pipelined serve loop: keep "
+                         "up to N dispatched steps/windows in flight "
+                         "instead of block_until_ready per step")
     args = ap.parse_args(argv)
+    if args.fuse < 1 or args.inflight < 1:
+        print("[serve] --fuse and --inflight must be >= 1",
+              file=sys.stderr)
+        return 2
     if args.planes > 1 or args.controller:
         if args.no_morpheus:
             print("[serve] --no-morpheus is a single-plane baseline "
@@ -253,14 +393,16 @@ def main(argv=None) -> int:
             locality=args.locality,
             recompile_every=args.recompile_every,
             batch_size=args.batch_size, workers=args.workers,
-            mesh=args.mesh, xla_cache_dir=args.xla_cache_dir)
+            mesh=args.mesh, xla_cache_dir=args.xla_cache_dir,
+            fuse=args.fuse, inflight=args.inflight)
         controller.close()
         return 0
     _, rt = run_serve(steps=args.steps, locality=args.locality,
                       morpheus=not args.no_morpheus,
                       recompile_every=args.recompile_every,
                       batch_size=args.batch_size, mesh=args.mesh,
-                      xla_cache_dir=args.xla_cache_dir)
+                      xla_cache_dir=args.xla_cache_dir,
+                      fuse=args.fuse, inflight=args.inflight)
     rt.close()
     return 0
 

@@ -1,2 +1,3 @@
 from .dataplane import ServeConfig, build_fleet, build_params, \
-    build_tables, make_request_batch, make_serve_step
+    build_tables, make_request_batch, make_request_windows, \
+    make_serve_step

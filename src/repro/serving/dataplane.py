@@ -253,3 +253,15 @@ def make_request_batch(cfg: ServeConfig, key, batch_size=8,
     return {"tokens": tokens.astype(jnp.int32),
             "class_id": class_id.astype(jnp.int32),
             "slot": slot.astype(jnp.int32)}
+
+
+def make_request_windows(cfg: ServeConfig, key, k: int, batch_size=8,
+                         **kw) -> list:
+    """K consecutive request batches for one fused serving window
+    (``MorpheusRuntime.step_many`` /
+    ``runtime.place_batch(..., fused=True)``): the same synthetic trace
+    as :func:`make_request_batch`, split across K independent subkeys so
+    a fused window sees the same traffic *distribution* as K single
+    steps.  ``kw`` forwards (locality / hot_offset / ...)."""
+    return [make_request_batch(cfg, kk, batch_size, **kw)
+            for kk in jax.random.split(key, k)]
