@@ -17,7 +17,7 @@ import jax
 
 from repro.core import EngineConfig, MorpheusRuntime, SketchConfig
 from repro.serving import ServeConfig, build_params, build_tables, \
-    make_request_batch, make_serve_step
+    make_synthetic_batch, make_serve_step
 
 from ._util import emit
 
@@ -47,16 +47,16 @@ def run() -> list:
             signature_cache=False)
         t0 = time.time()
         rt = MorpheusRuntime(make_serve_step(cfg), tables, params,
-                             make_request_batch(cfg,
+                             make_synthetic_batch(cfg,
                                                 jax.random.PRNGKey(0)),
                              cfg=ecfg)
         for i in range(8):
-            rt.step(make_request_batch(cfg, jax.random.PRNGKey(i)))
+            rt.step(make_synthetic_batch(cfg, jax.random.PRNGKey(i)))
         rt.recompile(block=True)
         # second cycle measures the warm pipeline (first pays dispatch
         # warmup); paper reports steady-state recompiles
         for i in range(8):
-            rt.step(make_request_batch(cfg, jax.random.PRNGKey(100 + i)))
+            rt.step(make_synthetic_batch(cfg, jax.random.PRNGKey(100 + i)))
         rt.tables.version += 1          # force a fresh plan+compile
         rt.recompile(block=True)
         t1 = rt.stats.t1_history[-1]

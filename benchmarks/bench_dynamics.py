@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.core import EngineConfig, MorpheusRuntime, SketchConfig
 from repro.serving import ServeConfig, build_params, build_tables, \
-    make_request_batch, make_serve_step
+    make_synthetic_batch, make_serve_step
 
 from ._util import emit
 
@@ -37,7 +37,7 @@ def run(recompile_every: int = 10) -> list:
         features={"vision_enabled": False, "track_sessions": True},
         moe_router_table="router")
     rt = MorpheusRuntime(make_serve_step(cfg), tables, params,
-                         make_request_batch(cfg, jax.random.PRNGKey(0)),
+                         make_synthetic_batch(cfg, jax.random.PRNGKey(0)),
                          cfg=ecfg)
 
     rows = []
@@ -45,7 +45,7 @@ def run(recompile_every: int = 10) -> list:
     for phase, kw, n in PHASES:
         lat = []
         for i in range(n):
-            b = make_request_batch(cfg, jax.random.PRNGKey(step), 8, **kw)
+            b = make_synthetic_batch(cfg, jax.random.PRNGKey(step), 8, **kw)
             t0 = time.time()
             jax.block_until_ready(rt.step(b))
             lat.append(time.time() - t0)

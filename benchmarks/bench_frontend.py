@@ -1,0 +1,285 @@
+"""Serving-frontend benchmark — offered-load sweep, goodput + SLO tail.
+
+The request-level analogue of ``bench_dispatch``: open-loop synthetic
+arrivals (Poisson and bursty ON/OFF at the same long-run rate) through
+the full queue -> dynamic batcher -> fused ``step_many`` path, at three
+offered loads relative to the plane's measured capacity.  Two variants
+run the SAME traces:
+
+  adaptive   the full pad-bucket ladder (1..8) with
+             ``BatchShapePass`` free to re-select ``(buckets, K)`` from
+             the observed arrival profile — periodic recompiles run
+             beside serving, exactly as in ``serve --frontend``;
+  static     one fixed max-size bucket, K=1 — the deploy-time batching
+             policy Morpheus replaces.  It recompiles on the same
+             cadence (table-level specialization still applies), so the
+             comparison isolates the batch-shape decision itself.
+
+Per cell: goodput (SLO-met requests/sec), p50/p99 request latency, SLO
+attainment, pad-row overhead, and the plan's selected batch shape.  The
+headline ``p99_ratio`` (adaptive/static at the sub-capacity loads) is
+the PR's acceptance metric: adaptive must not regress the tail.
+
+``json_record()`` feeds ``BENCH_frontend.json`` (written by
+``benchmarks/run.py`` and uploaded by the CI smoke job).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core import EngineConfig, MorpheusRuntime, SketchConfig, \
+    plan_batch_shape
+from repro.serving import ServeConfig, build_params, build_tables, \
+    make_request_batch, make_request_rows, make_serve_step, \
+    make_synthetic_batch
+from repro.serving.frontend import FrontendConfig, OpenLoopDriver, \
+    ServingFrontend, bursty_onoff_gaps, poisson_gaps
+
+from ._util import emit
+
+_LAST: dict = {}
+
+# deliberately tiny: the bench measures BATCHING policy, so per-step
+# device time must stay small enough that queueing (not compute)
+# dominates the latency distribution
+TINY = ServeConfig(d_model=32, n_layers=1, n_heads=4, vocab=128,
+                   n_experts=4, d_ff=32, n_classes=8, n_slots=32, seq=4)
+MAX_BATCH = 8
+SERIES = ("request_queue_wait_s", "request_batch_wait_s",
+          "request_execute_s", "request_total_s")
+COUNTERS = ("requests_completed", "requests_rejected", "requests_shed",
+            "slo_met", "slo_missed", "batches_formed", "pad_rows",
+            "shape_mispredicts")
+
+
+def _mk_variant(ladder, k_max):
+    key = jax.random.PRNGKey(0)
+    rt = MorpheusRuntime(
+        make_serve_step(TINY), build_tables(TINY, key),
+        build_params(TINY, key),
+        make_synthetic_batch(TINY, key, MAX_BATCH),
+        cfg=EngineConfig(
+            sketch=SketchConfig(sample_every=4, max_hot=4,
+                                hot_coverage=0.6),
+            features={"vision_enabled": False, "track_sessions": True},
+            moe_router_table="router"))
+    fcfg = FrontendConfig(capacity=512, max_batch=MAX_BATCH,
+                          ladder=ladder, max_wait_s=2e-3,
+                          window_k_max=k_max, inflight=2)
+    fe = ServingFrontend(rt, fcfg, keep_outputs=False)
+    # warm every formable window shape (incl. instrumented twins and the
+    # generic deopt target) — the traces must measure batching policy,
+    # not one-time t2 compiles
+    rows = make_request_rows(TINY, key, MAX_BATCH)
+    for b in fcfg.ladder_resolved():
+        rt.warm_fused([make_request_batch(rows[:b], b)])
+    primary = make_request_batch(rows, fcfg.ladder_resolved()[-1])
+    for k in range(2, k_max + 1):
+        rt.warm_fused([primary] * k)
+    return rt, fe
+
+
+def _capacity_req_s(rt) -> float:
+    """Measured serving capacity: max-bucket windows, back to back."""
+    rows = make_request_rows(TINY, jax.random.PRNGKey(9), MAX_BATCH)
+    b = make_request_batch(rows, MAX_BATCH)
+    window = rt.place_batch([b], fused=True)
+    jax.block_until_ready(rt.step_many(window, k=1))
+    t0 = time.time()
+    n = 20
+    for _ in range(n):
+        jax.block_until_ready(rt.step_many(window, k=1))
+    return n * MAX_BATCH / (time.time() - t0)
+
+
+def _run_one(rt, fe, gap_fn, rate, requests, slo_s, seed,
+             recompile_every_s=0.25) -> dict:
+    st = rt.stats
+    st.reset_hist(*SERIES)
+    base = {c: getattr(st, c) for c in COUNTERS}
+    # fixed payload key: every cell serves the SAME traffic
+    # distribution (same hot classes/tokens => the table-level plan
+    # stays stable across cells and recompiles revalidate); only the
+    # arrival TIMING varies with the cell seed
+    payloads = make_request_rows(TINY, jax.random.PRNGKey(1234),
+                                 requests)
+    gaps = gap_fn(rate, requests, seed=seed)
+    t0 = time.time()
+    driver = OpenLoopDriver([fe], payloads, gaps,
+                            deadline_s=slo_s).start()
+    # fine-grained poll, coarse recompile cadence: the poll sleep must
+    # not quantize the measured wall (goodput denominator) to its own
+    # period
+    next_rc = time.time() + recompile_every_s
+    while driver._thread is not None and driver._thread.is_alive():
+        time.sleep(5e-3)
+        if time.time() >= next_rc:
+            rt.recompile(block=False)  # the control loop beside serving
+            next_rc = time.time() + recompile_every_s
+    driver.join()
+    fe.drain(timeout=120.0)
+    wall = max(time.time() - t0, 1e-9)
+    # one post-trace cycle: the next cell starts on a plan selected from
+    # THIS cell's profile (and json records what was selected)
+    rt.recompile(block=True)
+    d = {c: getattr(st, c) - base[c] for c in COUNTERS}
+    deadlined = d["slo_met"] + d["slo_missed"]
+    return {
+        "offered_req_s": rate,
+        "requests": requests,
+        "wall_s": wall,
+        "completed": d["requests_completed"],
+        "rejected": d["requests_rejected"],
+        "shed": d["requests_shed"],
+        "goodput_req_s": d["slo_met"] / wall,
+        "slo_attainment": (d["slo_met"] / deadlined) if deadlined
+        else None,
+        "p50_ms": st.quantile("request_total_s", 0.50) * 1e3,
+        "p99_ms": st.quantile("request_total_s", 0.99) * 1e3,
+        "batches": d["batches_formed"],
+        "pad_rows": d["pad_rows"],
+        "mispredicts": d["shape_mispredicts"],
+        "batch_shape": plan_batch_shape(rt.plan),
+    }
+
+
+def _run_cell(rt, fe, gap_fn, rate, requests, slo_s, seed,
+              repeats: int = 2) -> dict:
+    """Best-of-N rounds (highest SLO attainment, then lowest p99) — the
+    same screening bench_dispatch uses: one descheduled compile thread
+    or GC pause mid-trace would otherwise dominate a whole cell."""
+    best = None
+    for r in range(repeats):
+        cell = _run_one(rt, fe, gap_fn, rate, requests, slo_s,
+                        seed + 101 * r)
+        key = (cell["slo_attainment"] if cell["slo_attainment"]
+               is not None else 0.0, -cell["p99_ms"])
+        if best is None or key > best[0]:
+            best = (key, cell)
+    return best[1]
+
+
+def run(tiny: bool = False) -> list:
+    requests = 150 if tiny else 500
+    # fractions of the measured back-to-back capacity — which is an
+    # optimistic bound (no batcher host time, no recompiles), so the
+    # sustained-sub-capacity cells sit well below it and only the last
+    # cell is a deliberate overload
+    loads = (0.3, 0.6, 1.2)
+    arrivals = {"poisson": poisson_gaps, "onoff": bursty_onoff_gaps}
+    variants = {"adaptive": (None, 4),          # full ladder, K free
+                "static": ((MAX_BATCH,), 1)}    # one bucket, K=1
+
+    record = {"config": {"tiny": tiny, "requests": requests,
+                         "loads": loads, "max_batch": MAX_BATCH,
+                         "slo_ms": 50.0},
+              "variants": {}, "cells": {}}
+    rows, cells = [], {}
+    built = {vname: _mk_variant(*spec) for vname, spec in
+             variants.items()}
+    try:
+        # ONE offered-rate scale for every variant: both must serve the
+        # IDENTICAL arrival trace, or the p99/goodput ratios compare
+        # different traffic, not different batching policies.  The
+        # shared scale is the most conservative of the per-variant
+        # back-to-back capacity measurements.
+        caps = {vname: _capacity_req_s(rt)
+                for vname, (rt, _) in built.items()}
+        cap = min(caps.values())
+        record["config"]["capacity_req_s_shared"] = cap
+        for vname, (ladder, k_max) in variants.items():
+            rt, fe = built[vname]
+            record["variants"][vname] = {
+                "ladder": list(fe.cfg.ladder_resolved()),
+                "window_k_max": k_max,
+                "capacity_req_s": caps[vname]}
+            fe.start()
+            # unmeasured traces at BOTH load levels the sweep visits:
+            # the batch-shape choice differs by load, and each choice is
+            # its own plan signature — warming both fills the
+            # signature-keyed executable cache, so a mid-cell flip
+            # recompiles into cache hits instead of a t2 storm
+            for warm_load in (0.6, 0.3):
+                _run_one(rt, fe, poisson_gaps, rate=warm_load * cap,
+                         requests=max(requests // 2, 50), slo_s=50e-3,
+                         seed=99)
+                rt.recompile(block=True)
+            seed = 0
+            for aname, gap_fn in arrivals.items():
+                for load in loads:
+                    seed += 1
+                    cell = _run_cell(rt, fe, gap_fn, rate=load * cap,
+                                     requests=requests, slo_s=50e-3,
+                                     seed=seed,
+                                     repeats=2 if tiny else 3)
+                    cell["load"] = load
+                    cells.setdefault(f"{aname}/load{load}", {})[vname] \
+                        = cell
+            fe.stop(drain=True)
+    finally:
+        for rt, fe in built.values():
+            fe.stop(drain=True)
+            rt.close()
+
+    for cname, pair in cells.items():
+        if {"adaptive", "static"} <= pair.keys():
+            s, a = pair["static"], pair["adaptive"]
+            pair["p99_ratio"] = a["p99_ms"] / max(s["p99_ms"], 1e-9)
+            pair["goodput_ratio"] = (a["goodput_req_s"]
+                                     / max(s["goodput_req_s"], 1e-9))
+        for vname in ("adaptive", "static"):
+            c = pair[vname]
+            att = c["slo_attainment"]
+            rows.append((
+                f"frontend/{cname}/{vname}", c["p99_ms"] * 1e3,
+                f"goodput={c['goodput_req_s']:.0f}"
+                f";slo={att if att is None else round(att, 3)}"
+                f";shape={c['batch_shape']}"))
+    record["cells"] = cells
+
+    # headline: adaptive must not regress the tail at sub-capacity load
+    sub = [pair["p99_ratio"] for cname, pair in cells.items()
+           if "p99_ratio" in pair
+           and max(pair["adaptive"]["load"], 0) < 1.0]
+    record["p99_ratio_subcapacity_max"] = max(sub) if sub else None
+    record["goodput_ratio_geomean"] = float(np.exp(np.mean([
+        np.log(max(p["goodput_ratio"], 1e-9)) for p in cells.values()
+        if "goodput_ratio" in p]))) if cells else None
+    rows.append(("frontend/p99_ratio_subcapacity_max",
+                 record["p99_ratio_subcapacity_max"] or 0.0,
+                 f"adaptive_vs_static={record['p99_ratio_subcapacity_max']}"
+                 f";goodput_geomean={record['goodput_ratio_geomean']}"))
+    global _LAST
+    _LAST = record
+    return rows
+
+
+def json_record() -> dict:
+    """The machine-readable result of the last :func:`run` call —
+    written to ``BENCH_frontend.json`` by ``run.py`` and the CI smoke
+    job."""
+    return dict(_LAST)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke configuration (fewer requests)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the machine-readable record here")
+    args = ap.parse_args(argv)
+    emit(run(tiny=args.tiny))
+    if args.json:
+        Path(args.json).write_text(json.dumps(json_record(), indent=2)
+                                   + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

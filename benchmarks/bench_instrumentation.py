@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.core import EngineConfig, MorpheusRuntime, SketchConfig
 from repro.serving import ServeConfig, build_params, build_tables, \
-    make_request_batch, make_serve_step
+    make_synthetic_batch, make_serve_step
 
 from ._util import emit, time_steps
 
@@ -36,7 +36,7 @@ def _make(sample_every, enable=True):
         features={"vision_enabled": False, "track_sessions": True},
         moe_router_table="router")
     rt = MorpheusRuntime(make_serve_step(cfg), tables, params,
-                         make_request_batch(cfg, jax.random.PRNGKey(0)),
+                         make_synthetic_batch(cfg, jax.random.PRNGKey(0)),
                          cfg=ecfg, enable=enable)
     rt.sampler.pin(sample_every)               # pin the cadence
     return cfg, rt
@@ -45,7 +45,7 @@ def _make(sample_every, enable=True):
 def run(steps: int = 60) -> list:
     rows = []
     cfg = ServeConfig()
-    batches = [make_request_batch(cfg, jax.random.PRNGKey(i), 8, "low")
+    batches = [make_synthetic_batch(cfg, jax.random.PRNGKey(i), 8, "low")
                for i in range(steps)]
 
     _, rt0 = _make(8, enable=False)

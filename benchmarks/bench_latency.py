@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.core import EngineConfig, MorpheusRuntime, SketchConfig
 from repro.serving import ServeConfig, build_params, build_tables, \
-    make_request_batch, make_serve_step
+    make_synthetic_batch, make_serve_step
 
 from ._util import emit
 
@@ -43,9 +43,9 @@ def run(steps: int = 60) -> list:
         features={"vision_enabled": False, "track_sessions": True},
         moe_router_table="router")
     rt = MorpheusRuntime(make_serve_step(cfg), tables, params,
-                         make_request_batch(cfg, jax.random.PRNGKey(0)),
+                         make_synthetic_batch(cfg, jax.random.PRNGKey(0)),
                          cfg=ecfg)
-    batches = [make_request_batch(cfg, jax.random.PRNGKey(i), 8, "high")
+    batches = [make_synthetic_batch(cfg, jax.random.PRNGKey(i), 8, "high")
                for i in range(steps)]
     rt.sampler.pin(2)
     for b in batches[:16]:

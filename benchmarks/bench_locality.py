@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.core import EngineConfig, MorpheusRuntime, SketchConfig
 from repro.serving import ServeConfig, build_params, build_tables, \
-    make_request_batch, make_serve_step
+    make_synthetic_batch, make_serve_step
 
 from ._util import Row, emit, time_steps
 
@@ -33,7 +33,7 @@ def _runtime(mode: str, cfg: ServeConfig, params, steps_warm=10):
                                   "track_sessions": True},
                         moe_router_table=router)
     rt = MorpheusRuntime(make_serve_step(cfg), tables, params,
-                         make_request_batch(cfg, jax.random.PRNGKey(0)),
+                         make_synthetic_batch(cfg, jax.random.PRNGKey(0)),
                          cfg=ecfg, enable=(mode != "baseline"))
     return rt
 
@@ -49,7 +49,7 @@ def run(steps: int = 60) -> list:
 
     rows: list = []
     for locality in ("high", "low", "none"):
-        batches = [make_request_batch(cfg, jax.random.PRNGKey(i), 8,
+        batches = [make_synthetic_batch(cfg, jax.random.PRNGKey(i), 8,
                                       locality=locality)
                    for i in range(steps)]
         for mode in ("baseline", "eswitch", "morpheus"):

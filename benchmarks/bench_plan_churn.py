@@ -32,7 +32,7 @@ import numpy as np
 
 from repro.core import EngineConfig, MorpheusRuntime, SketchConfig
 from repro.serving import ServeConfig, build_params, build_tables, \
-    make_request_batch, make_serve_step
+    make_synthetic_batch, make_serve_step
 
 from ._util import emit
 
@@ -51,7 +51,7 @@ def _build_runtime(cfg: ServeConfig, signature_cache: bool):
         moe_router_table="router",
         signature_cache=signature_cache)
     rt = MorpheusRuntime(make_serve_step(cfg), tables, params,
-                         make_request_batch(cfg, jax.random.PRNGKey(0)),
+                         make_synthetic_batch(cfg, jax.random.PRNGKey(0)),
                          cfg=ecfg)
     # pin the sampling cadence: the benchmark needs identical
     # instrumentation per repeated phase, not an adapting (or
@@ -79,7 +79,7 @@ def _drive(rt, cfg: ServeConfig, workload: str, cycles: int,
         tp = parity if workload == "hotset" else 0
         kw = dict(locality="high", hot_offset=11 * tp)
         for i in range(steps_per_phase):
-            b = make_request_batch(cfg,
+            b = make_synthetic_batch(cfg,
                                    jax.random.PRNGKey(1000 * tp + i),
                                    8, **kw)
             jax.block_until_ready(rt.step(b))

@@ -8,7 +8,7 @@ import numpy as np
 from repro.core import EngineConfig, MorpheusRuntime, SketchConfig, \
     instrument
 from repro.serving import ServeConfig, build_params, build_tables, \
-    make_request_batch, make_serve_step
+    make_synthetic_batch, make_serve_step
 
 from ._util import emit, time_steps
 
@@ -21,7 +21,7 @@ def run(steps: int = 48) -> list:
         bias = np.zeros(cfg.n_experts, np.float32)
         bias[:3] = 6.0
         lp["moe"]["b_router"] = jnp.asarray(bias)
-    batches = [make_request_batch(cfg, jax.random.PRNGKey(i), 8, "low")
+    batches = [make_synthetic_batch(cfg, jax.random.PRNGKey(i), 8, "low")
                for i in range(steps)]
 
     for every in (1, 2, 4, 8, 16, 32):
@@ -32,7 +32,7 @@ def run(steps: int = 48) -> list:
                                       "track_sessions": True},
                             moe_router_table="router")
         rt = MorpheusRuntime(make_serve_step(cfg), tables, params,
-                             make_request_batch(cfg,
+                             make_synthetic_batch(cfg,
                                                 jax.random.PRNGKey(0)),
                              cfg=ecfg)
         rt.sampler.pin(every)

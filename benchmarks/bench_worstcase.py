@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.core import EngineConfig, MorpheusRuntime, SketchConfig
 from repro.serving import ServeConfig, build_params, build_tables, \
-    make_request_batch, make_serve_step
+    make_synthetic_batch, make_serve_step
 
 from ._util import emit, time_steps
 
@@ -30,7 +30,7 @@ def _rt(instrument_sessions: bool, enable=True):
         features={"vision_enabled": False, "track_sessions": True},
         moe_router_table=None)
     rt = MorpheusRuntime(make_serve_step(cfg), tables, params,
-                         make_request_batch(cfg, jax.random.PRNGKey(0)),
+                         make_synthetic_batch(cfg, jax.random.PRNGKey(0)),
                          cfg=ecfg, enable=enable)
     return cfg, rt
 
@@ -48,7 +48,7 @@ def _run_with_churn(rt, batches, recompile_every=12, drift=True):
         if drift:
             # session churn ONLY (the NAT pathology): class/token traffic
             # stays stationary, the hot session set rotates
-            b = make_request_batch(cfg, jax.random.PRNGKey(10000 + i), 8,
+            b = make_synthetic_batch(cfg, jax.random.PRNGKey(10000 + i), 8,
                                    "low", hot_slots=6,
                                    slot_offset=7 * (i // 12))
         t0 = _t.time()
@@ -62,7 +62,7 @@ def _run_with_churn(rt, batches, recompile_every=12, drift=True):
 def run(steps: int = 100) -> list:
     rows = []
     cfg = ServeConfig()
-    batches = [make_request_batch(cfg, jax.random.PRNGKey(i), 8, "low",
+    batches = [make_synthetic_batch(cfg, jax.random.PRNGKey(i), 8, "low",
                                   hot_slots=6)
                for i in range(steps)]
 

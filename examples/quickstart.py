@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.core import EngineConfig, MorpheusRuntime, SketchConfig
 from repro.serving import ServeConfig, build_params, build_tables, \
-    make_request_batch, make_serve_step
+    make_synthetic_batch, make_serve_step
 
 cfg = ServeConfig()
 key = jax.random.PRNGKey(0)
@@ -28,7 +28,7 @@ for lp in params["layers"]:                      # a domain-skewed router
 tables = build_tables(cfg, key)
 runtime = MorpheusRuntime(
     make_serve_step(cfg), tables, params,
-    make_request_batch(cfg, key),
+    make_synthetic_batch(cfg, key),
     cfg=EngineConfig(
         sketch=SketchConfig(sample_every=4, max_hot=4, hot_coverage=0.8),
         features={"vision_enabled": False, "track_sessions": True},
@@ -39,7 +39,7 @@ print("static analysis:", runtime.analysis["mutability"])
 def bench(n=40):
     ts = []
     for i in range(n):
-        b = make_request_batch(cfg, jax.random.PRNGKey(i), 8, "high")
+        b = make_synthetic_batch(cfg, jax.random.PRNGKey(i), 8, "high")
         t0 = time.time()
         jax.block_until_ready(runtime.step(b))
         ts.append(time.time() - t0)
@@ -57,7 +57,7 @@ print(f"specialized {1e3*t_specialized:7.2f} ms/batch "
 
 # semantics: specialized == generic (run_generic replays the generic
 # executable against a copy of the live PlaneState)
-b = make_request_batch(cfg, jax.random.PRNGKey(999), 8, "high")
+b = make_synthetic_batch(cfg, jax.random.PRNGKey(999), 8, "high")
 out_s = runtime.step(b)
 out_g = runtime.run_generic(b)
 print("max |specialized - generic| =",

@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.core import EngineConfig, MorpheusRuntime, SketchConfig
 from repro.serving import ServeConfig, build_params, build_tables, \
-    make_request_batch, make_serve_step
+    make_synthetic_batch, make_serve_step
 
 cfg = ServeConfig()
 key = jax.random.PRNGKey(0)
@@ -24,7 +24,7 @@ for lp in params["layers"]:
     lp["moe"]["b_router"] = jnp.asarray(bias)
 tables = build_tables(cfg, key)
 rt = MorpheusRuntime(
-    make_serve_step(cfg), tables, params, make_request_batch(cfg, key),
+    make_serve_step(cfg), tables, params, make_synthetic_batch(cfg, key),
     cfg=EngineConfig(
         sketch=SketchConfig(sample_every=4, max_hot=4, hot_coverage=0.6),
         features={"vision_enabled": False, "track_sessions": True},
@@ -39,7 +39,7 @@ step = 0
 for phase, kw in phases:
     lat = []
     for i in range(30):
-        b = make_request_batch(cfg, jax.random.PRNGKey(step), 8, **kw)
+        b = make_synthetic_batch(cfg, jax.random.PRNGKey(step), 8, **kw)
         t0 = time.time()
         jax.block_until_ready(rt.step(b))
         lat.append(time.time() - t0)
@@ -54,7 +54,7 @@ for phase, kw in phases:
 print("\ncontrol-plane update (temperature push)...")
 rt.control_update("req_class",
                   {"temperature": np.full(cfg.n_classes, 1.3, np.float32)})
-b = make_request_batch(cfg, jax.random.PRNGKey(step), 8, "high")
+b = make_synthetic_batch(cfg, jax.random.PRNGKey(step), 8, "high")
 rt.step(b)
 print(f"deopt steps: {rt.stats.deopt_steps} (guard caught the update)")
 rt.recompile(block=True)

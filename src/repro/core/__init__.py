@@ -5,9 +5,11 @@ from .ctx import DataPlaneCtx
 from .engine import EngineConfig, MorpheusEngine
 from .execcache import CacheStats, ExecutableCache, \
     enable_persistent_xla_cache
+from .histogram import StreamingHistogram
 from .instrument import AdaptiveController, SketchConfig, \
     SketchDoubleBuffer
-from .passes import PassRegistry, SpecializationPass, default_registry
+from .passes import BATCH_SHAPE_SITE, BatchShapePass, PassRegistry, \
+    SpecializationPass, default_registry, plan_batch_shape
 from .runtime import MorpheusRuntime, RuntimeStats, stack_batches
 from .snapshot import TableSnapshotWorker, VersionedSnapshot
 from .specialize import GENERIC_PLAN, SiteSpec, SpecializationPlan

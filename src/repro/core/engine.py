@@ -191,7 +191,8 @@ class MorpheusEngine:
 
     # ---- §4.2 + §4.3: read instrumentation, run the registry ---------------
     def build_plan(self, instr_state, instrumented: bool = False,
-                   snapshot=None, version: Optional[int] = None
+                   snapshot=None, version: Optional[int] = None,
+                   profile: Optional[Dict[str, Any]] = None
                    ) -> Tuple[SpecializationPlan, float, Dict]:
         """Plan a specialized executable: read the (already merged,
         host-side) instrumentation sketches, snapshot the tables, and
@@ -206,7 +207,10 @@ class MorpheusEngine:
         update racing past the snapshot deopts the plan via the
         program-level guard rather than corrupting it.  (Stamping a
         stale snapshot with the live version would defeat that guard,
-        hence the ValueError.)
+        hence the ValueError.)  ``profile`` is an optional request-level
+        traffic snapshot (the serving frontend's arrival profile —
+        arrival rate, batch-size histogram, pad-bucket occupancy),
+        exposed to plan-level passes as ``PlanInputs.profile``.
 
         Returns ``(plan, t1_seconds, pass_stats)``."""
         assert self._analyzed
@@ -232,7 +236,8 @@ class MorpheusEngine:
 
         inputs = PlanInputs(mutability=dict(self.mutability),
                             hot_stats=hot_stats, sketch=self.cfg.sketch,
-                            features=dict(self.cfg.features))
+                            features=dict(self.cfg.features),
+                            profile=profile)
         draft = self.registry.build(self.sites, snapshot, inputs)
         specs = {sid: spec for sid, spec in draft.specs.items()
                  if spec is not None}

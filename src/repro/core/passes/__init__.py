@@ -16,6 +16,8 @@ pipeline with ``registry.register(MyPass(), before="fastpath")``.
 """
 from typing import Optional
 
+from .batch_shape import BATCH_SHAPE_SITE, BatchShapePass, \
+    plan_batch_shape
 from .branch_inject import MoEFastPathPass, moe_ffn_hotpath, \
     plan_moe_fastpath
 from .const_prop import ConstPropPass
@@ -38,6 +40,7 @@ def default_registry(moe_router_table: Optional[str] = None
         MoEFastPathPass(moe_router_table),
         TrafficFastPathPass(),
         DStructPass(),
+        BatchShapePass(),
         DeadCodePass(),
         GuardElisionPass(),
     ))

@@ -36,12 +36,16 @@ from ..tables import CallSite, Table
 class PlanInputs:
     """Everything a pass may consult besides the table snapshot: the
     engine's RO/RW classification, per-site heavy-hitter stats read from
-    the instrumentation sketches, the sketch config, and the control
-    plane's feature flags."""
+    the instrumentation sketches, the sketch config, the control
+    plane's feature flags, and (when a serving frontend is attached) the
+    request-level traffic ``profile`` — arrival rate, batch-size
+    histogram, pad-bucket occupancy — consumed by plan-level passes
+    like :class:`~repro.core.passes.batch_shape.BatchShapePass`."""
     mutability: Mapping[str, str]
     hot_stats: Mapping[str, Tuple[np.ndarray, float]]
     sketch: SketchConfig
     features: Mapping[str, bool]
+    profile: Optional[Mapping] = None
 
     def mut(self, table: str) -> str:
         """RO/RW classification of ``table`` ("rw" when unknown — the

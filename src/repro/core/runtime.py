@@ -110,9 +110,40 @@ def stack_batches(batches: Sequence[Any]):
         return jax.tree.map(lambda x: jnp.asarray(x)[None], batches[0])
     return jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
 
+
+def _induced_window_avals(plan, fused_shapes):
+    """Window shapes a batch-shape-selecting plan will *induce*: when
+    :class:`~repro.core.passes.batch_shape.BatchShapePass` planned
+    ``(buckets, K)``, the batcher will form ``(bucket, k=1)`` windows
+    for every pad bucket plus ``(primary, 2..K)`` overflow chunks —
+    shapes that may never have been served yet.  Derive their stacked
+    avals from the most recently served window structure by resizing
+    the two leading (window, batch) axes; returns
+    ``[((bkey, k), avals), ...]`` for the recompile cycle to precompile
+    alongside the shapes traffic has already shown."""
+    from .passes.batch_shape import plan_batch_shape
+    sel = plan_batch_shape(plan)
+    if sel is None or not fused_shapes:
+        return []
+    buckets, kk = sel
+    primary = buckets[-1]
+    want = [(b, 1) for b in buckets]
+    want += [(primary, j) for j in range(2, max(kk, 1) + 1)]
+    _, template = fused_shapes[-1]          # MRU structure
+    if any(len(s.shape) < 2 for s in jax.tree.leaves(template)):
+        return []                           # not a stacked batch pytree
+    out = []
+    for b, j in want:
+        avals = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((j, b) + s.shape[2:],
+                                           s.dtype), template)
+        out.append(((batch_key(avals), j), avals))
+    return out
+
 from .controller import ControllerConfig, MorpheusController
 from .engine import EngineConfig, MorpheusEngine
 from .execcache import ExecutableCache, batch_key
+from .histogram import StreamingHistogram
 from . import instrument
 from .snapshot import TableSnapshotWorker, VersionedSnapshot
 from .specialize import SpecializationPlan
@@ -126,11 +157,19 @@ class RuntimeStats:
 
     Mutated concurrently by the dispatch path, the control plane, and
     the controller's recompile workers — every write goes through
-    :meth:`bump` (scalar counters) or :meth:`log` (histories) under one
+    :meth:`bump` (scalar counters), :meth:`log` (histories) or
+    :meth:`observe`/:meth:`observe_many` (latency histograms) under one
     internal lock, so no increment is ever torn or lost.  Plain
     attribute *reads* are fine for printouts and tests;
     :meth:`snapshot` returns a consistent plain-dict copy (what
-    ``controller.stats()`` aggregates across planes)."""
+    ``controller.stats()`` aggregates across planes).
+
+    Latency distributions (step latency, the serving frontend's
+    per-request queue/batch/execute/total waits) all go through ONE
+    implementation — named :class:`~repro.core.histogram.\
+StreamingHistogram` series in ``hists`` — so p50/p99 everywhere in the
+    repo mean the same thing and fleet aggregation is a bucket-wise
+    merge."""
     steps: int = 0
     deopt_steps: int = 0          # routed to generic by the program guard
     instr_steps: int = 0
@@ -141,16 +180,28 @@ class RuntimeStats:
     cache_misses: int = 0         # executables that had to be compiled
     queued_updates: int = 0
     batch_transfers: int = 0      # actual H2D batch placements performed
-    locked_calls: int = 0         # stats-lock acquisitions (bump/log) —
-                                  # the dispatch fast path must make at
-                                  # most ONE per step or fused window
-                                  # (regression-checked by
+    # ---- request-level accounting (repro.serving.frontend) ----
+    requests_submitted: int = 0
+    requests_rejected: int = 0    # admission control: bounded queue full
+    requests_shed: int = 0        # deadline expired before dispatch
+    requests_completed: int = 0
+    slo_met: int = 0              # completed with deadline, in time
+    slo_missed: int = 0           # completed with deadline, late
+    batches_formed: int = 0
+    pad_rows: int = 0             # padding rows dispatched (occupancy)
+    shape_mispredicts: int = 0    # batches whose ideal pad bucket was
+                                  # not in the active plan's bucket set
+    locked_calls: int = 0         # stats-lock acquisitions (bump/log/
+                                  # observe) — the dispatch fast path
+                                  # must make at most ONE per step or
+                                  # fused window (regression-checked by
                                   # benchmarks/bench_dispatch.py)
     t1_history: List[float] = field(default_factory=list)
     t2_history: List[float] = field(default_factory=list)
     swap_history: List[float] = field(default_factory=list)
     pass_stats: Dict[str, int] = field(default_factory=dict)
     snapshot_versions: List[int] = field(default_factory=list)
+    hists: Dict[str, "StreamingHistogram"] = field(default_factory=dict)
 
     def __post_init__(self):
         self._lock = threading.Lock()
@@ -171,14 +222,67 @@ class RuntimeStats:
             self.locked_calls += 1
             getattr(self, name).append(value)
 
+    def observe(self, name: str, value: float, **counters: int) -> None:
+        """Record one sample into the named latency histogram (created
+        on first use), optionally bumping scalar counters in the SAME
+        lock acquisition."""
+        with self._lock:
+            self.locked_calls += 1
+            h = self.hists.get(name)
+            if h is None:
+                h = self.hists[name] = StreamingHistogram()
+            h.observe(value)
+            for cname, d in counters.items():
+                setattr(self, cname, getattr(self, cname) + d)
+
+    def observe_many(self, series: Dict[str, Sequence[float]],
+                     **counters: int) -> None:
+        """Record many samples across several histograms plus any scalar
+        counter deltas in ONE lock acquisition — the serving frontend
+        coalesces a whole fused window's per-request timings (4 series x
+        up to K·bucket requests) into a single locked call, same
+        discipline as the dispatch path's single ``bump`` per window."""
+        with self._lock:
+            self.locked_calls += 1
+            for name, values in series.items():
+                h = self.hists.get(name)
+                if h is None:
+                    h = self.hists[name] = StreamingHistogram()
+                h.observe_all(values)
+            for cname, d in counters.items():
+                setattr(self, cname, getattr(self, cname) + d)
+
+    def quantile(self, name: str, q: float) -> float:
+        """The q-quantile of the named histogram (NaN when absent or
+        empty) — e.g. ``stats.quantile("request_total_s", 0.99)``."""
+        with self._lock:
+            h = self.hists.get(name)
+            return h.quantile(q) if h is not None else float("nan")
+
+    def hist(self, name: str) -> Optional["StreamingHistogram"]:
+        """A consistent copy of the named histogram, or None."""
+        with self._lock:
+            h = self.hists.get(name)
+            return h.copy() if h is not None else None
+
+    def reset_hist(self, *names: str) -> None:
+        """Drop the named histogram series (e.g. to exclude a warmup
+        phase from the timed run's quantiles)."""
+        with self._lock:
+            for name in names:
+                self.hists.pop(name, None)
+
     def snapshot(self) -> Dict[str, Any]:
         """A consistent plain-dict copy of every field (lists/dicts
-        shallow-copied) — safe to aggregate while the runtime serves."""
+        shallow-copied; histograms reduced to their plain-dict
+        ``summary()``) — safe to aggregate while the runtime serves."""
         with self._lock:
             out: Dict[str, Any] = {}
             for f in dataclasses.fields(self):
                 v = getattr(self, f.name)
-                if isinstance(v, list):
+                if f.name == "hists":
+                    v = {k: h.summary() for k, h in v.items()}
+                elif isinstance(v, list):
                     v = list(v)
                 elif isinstance(v, dict):
                     v = dict(v)
@@ -334,6 +438,15 @@ class MorpheusRuntime:
                             Callable] = (
             self.generic_plan, gen_exec, gen_instr, gen_exec)
         self._example_batch = example_batch
+        # the single-step executables above are AOT-compiled against the
+        # example batch's exact structure; step_many consults this key
+        # to decide whether a K=1 window may take the step() fast path
+        # or must go through the per-structure fused machinery
+        self._example_bkey = batch_key(example_batch)
+        # optional traffic-profile source (the serving frontend's
+        # ArrivalProfile): snapshotted at each recompile cycle and
+        # merged into the plan inputs — see attach_profile
+        self._traffic_profile: Optional[Any] = None
 
         # double-buffered instrumentation: publish the initial (zeroed)
         # sketches now — this also compiles the tiny jitted copy fn
@@ -759,9 +872,15 @@ class MorpheusRuntime:
                     f"match the window size k={k}")
         if k == 1:
             # no fusion to amortize: run the single-step path and
-            # restack so the output contract stays (K, ...)
-            out = self.step(jax.tree.map(lambda x: x[0], stacked))
-            return jax.tree.map(lambda x: jnp.asarray(x)[None], out)
+            # restack so the output contract stays (K, ...).  Only valid
+            # when the batch has the example structure the single-step
+            # executables were AOT-compiled against — a frontend pad
+            # bucket (different leading dim) must fall through to the
+            # fused machinery, which compiles and caches per structure.
+            single = jax.tree.map(lambda x: x[0], stacked)
+            if batch_key(single) == self._example_bkey:
+                out = self.step(single)
+                return jax.tree.map(lambda x: jnp.asarray(x)[None], out)
         cnt: dict = {}
         stacked = self._place_batch(stacked, stacked=True, count=cnt)
         with self._cond:
@@ -810,6 +929,33 @@ class MorpheusRuntime:
             raise
         self._commit_step(gen, new_state, sampled, deltas)
         return out
+
+    def warm_fused(self, batches, k: Optional[int] = None) -> None:
+        """Precompile the K-step fused executables for a window
+        structure AHEAD of serving: the active plan, its instrumented
+        twin, and the generic deopt target all compile here (concurrent
+        misses, shared-cache dedup across planes), and the structure is
+        registered so future recompile cycles keep its fused variants
+        precompiled.  A serving frontend calls this once per pad bucket
+        at startup — the first real window (sampled or not, deopted or
+        not) then never stalls on an inline t2."""
+        if isinstance(batches, (list, tuple)):
+            k = len(batches)
+            stacked = stack_batches(batches)
+        else:
+            if k is None:
+                raise TypeError("warm_fused(stacked_pytree) needs k=")
+            stacked = batches
+        stacked = self._place_batch(stacked, stacked=True)
+        self._register_fused_shape(batch_key(stacked), k, stacked)
+        isites = self._active_isites
+        plan = self._active[0]
+        wanted = [plan, self._instr_twin(plan, isites),
+                  self.generic_plan,
+                  self._instr_twin(self.generic_plan, isites)]
+        avals = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), stacked)
+        self._get_many(wanted, avals, isites, fuse=k)
 
     def _register_fused_shape(self, bkey, k: int, stacked) -> None:
         """First sight of a (window structure, K): record its stacked
@@ -1007,6 +1153,19 @@ class MorpheusRuntime:
         # re-arm sampling + refresh the t1 snapshot off-thread
         self.controller.notify_update(self)
 
+    def attach_profile(self, profile) -> None:
+        """Attach a traffic-profile source — any object with a
+        ``snapshot() -> dict`` method (canonically the serving
+        frontend's :class:`~repro.serving.frontend.ArrivalProfile`).
+        Every recompile cycle reads one snapshot and merges it into the
+        plan inputs (``PlanInputs.profile``), so plan-level passes like
+        :class:`~repro.core.passes.batch_shape.BatchShapePass` can
+        specialize against request-level dynamics (arrival rate, batch
+        size distribution, pad-bucket occupancy) exactly as site passes
+        specialize against key-level sketches.  Pass ``None`` to
+        detach."""
+        self._traffic_profile = profile
+
     def set_feature(self, name: str, value: bool) -> None:
         """Flip a control-plane feature flag.  Bumps the table version:
         flags are control-plane state, so the program guard deopts any
@@ -1129,8 +1288,18 @@ class MorpheusRuntime:
                 # of dropping every traffic-dependent fast path and
                 # oscillating the signature
                 instr = self._plan_instr or instr
+            src = self._traffic_profile
+            profile = src.snapshot() if src is not None else None
+            if profile is not None:
+                # the pass applies hysteresis against the shape that is
+                # actually serving — selections hovering around a bucket
+                # edge must not flip the plan signature every cycle
+                from .passes.batch_shape import plan_batch_shape
+                profile["prev_shape"] = \
+                    plan_batch_shape(self._active[0])
             plan, t1, pass_stats = self.engine.build_plan(
-                instr, snapshot=snap.tables, version=snap.version)
+                instr, snapshot=snap.tables, version=snap.version,
+                profile=profile)
             self.stats.log("t1_history", t1)
             self.stats.pass_stats = pass_stats
 
@@ -1189,6 +1358,15 @@ class MorpheusRuntime:
             # must hit the cache, not stall serving on an inline t2
             with self._cond:     # step_many registers entries under it
                 fused_shapes = list(self._fused_shapes.items())
+            # ... and for the window shapes the NEW plan itself induces
+            # (BatchShapePass bucket/K selection): the swap must land
+            # with every shape the batcher will now form already
+            # compiled, not just the shapes traffic happened to show
+            done = {sk for sk, _ in fused_shapes}
+            for sk, avals in _induced_window_avals(plan, fused_shapes):
+                if sk not in done:
+                    done.add(sk)
+                    fused_shapes.append((sk, avals))
             for (bk, k), avals in fused_shapes:
                 fused_wanted = [plan, self._instr_twin(plan, isites)]
                 if isites != self._active_isites:

@@ -96,8 +96,11 @@ def _onehot(table_state, idx, fields, n_valid: int):
     for f in names:
         t = table_state[f][:n_valid]
         if jnp.issubdtype(t.dtype, jnp.floating) and t.ndim >= 2:
+            # contract the one-hot axis against the table's row axis;
+            # tensordot keeps this rank-polymorphic in idx (class ids
+            # are (batch,), token ids (batch, seq))
             oh = jax.nn.one_hot(idx, n_valid, dtype=t.dtype)
-            out[f] = jnp.einsum("tv,v...->t...", oh, t)
+            out[f] = jnp.tensordot(oh, t, axes=([-1], [0]))
         else:
             out[f] = jnp.take(t, jnp.clip(idx, 0, n_valid - 1), axis=0)
     return out

@@ -7,6 +7,12 @@
                                  # controller driving 4 data planes
     python -m repro.launch.serve --steps 512 --fuse 8 --inflight 4
                                  # fused windows + pipelined loop
+    python -m repro.launch.serve --frontend --rate 2000 --requests 600
+                                 # open-loop request arrivals through
+                                 # the serving frontend (SLO accounting,
+                                 # arrival-profile batch-shape passes)
+    python -m repro.launch.serve --frontend --planes 2 --arrival onoff
+                                 # N frontends, per-plane + fleet SLO
 
 The serve loop is **pipelined**: instead of `block_until_ready` after
 every step, up to ``--inflight`` dispatched steps stay in flight (JAX
@@ -43,11 +49,14 @@ import jax
 import numpy as np
 
 from ..core import ControllerConfig, EngineConfig, MorpheusController, \
-    MorpheusRuntime, SketchConfig
+    MorpheusRuntime, SketchConfig, StreamingHistogram, plan_batch_shape
 from ..distributed.meshctx import data_plane_mesh
 from ..serving import ServeConfig, build_fleet, build_params, \
-    build_tables, make_request_batch, make_request_windows, \
-    make_serve_step
+    build_tables, make_request_batch, make_request_rows, \
+    make_synthetic_batch, \
+    make_request_windows, make_serve_step
+from ..serving.frontend import FrontendConfig, OpenLoopDriver, \
+    ServingFrontend, bursty_onoff_gaps, poisson_gaps
 
 
 def _skewed_params(cfg: ServeConfig, key, skew_router: bool):
@@ -157,11 +166,11 @@ def run_serve(steps=200, locality="high", morpheus=True,
         mesh=mesh,
         xla_cache_dir=xla_cache_dir)
     rt = MorpheusRuntime(step_fn, tables, params,
-                         make_request_batch(cfg, key, batch_size),
+                         make_synthetic_batch(cfg, key, batch_size),
                          cfg=ecfg, enable=morpheus)
 
     def make_batch(i):
-        return make_request_batch(cfg, jax.random.PRNGKey(i), batch_size,
+        return make_synthetic_batch(cfg, jax.random.PRNGKey(i), batch_size,
                                   locality=locality)
 
     def place(raw):
@@ -194,15 +203,19 @@ def run_serve(steps=200, locality="high", morpheus=True,
     # overlaps async device compute at every depth (subtracting it
     # would credit time the pipeline already hid).
     serve_wall = max(wall - boundary["spent"], 1e-9)
-    lat = np.array(lat) / fuse          # per-step latencies
+    # per-step latencies through the shared histogram implementation
+    # (one p50/p99 definition for step AND request latency, see
+    # repro.core.histogram) — folded into RuntimeStats so controller
+    # aggregation sees them too
+    rt.stats.observe_many({"step_latency_s": [t / fuse for t in lat]})
     stats = {
         "steps": served,
         "n_devices": n_dev,
         "fuse": fuse,
         "inflight": inflight,
         "req_per_s": served * batch_size / serve_wall,
-        "p50_ms": float(np.percentile(lat, 50) * 1e3),
-        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "p50_ms": rt.stats.quantile("step_latency_s", 0.50) * 1e3,
+        "p99_ms": rt.stats.quantile("step_latency_s", 0.99) * 1e3,
         "wall_s": wall,
         "runtime": rt.stats,
         "hot_experts": rt.hot_experts(),
@@ -257,7 +270,7 @@ def run_controller_serve(planes=2, steps=200, locality="high",
                             **ecfg_kw)
         rts.append(MorpheusRuntime(
             step_fn, tables, params,
-            make_request_batch(cfg, key, batch_size),
+            make_synthetic_batch(cfg, key, batch_size),
             cfg=ecfg, controller=controller, plane_id=f"plane-{p}"))
 
     from collections import deque
@@ -306,7 +319,11 @@ def run_controller_serve(planes=2, steps=200, locality="high",
     # serializes with serving (inflight == 1) — matching run_serve
     serve_wall = max(wall - cycle_spent
                      - (prep_s if inflight == 1 else 0.0), 1e-9)
-    lat = np.array(lat) / fuse
+    # fleet-level step-latency quantiles via the shared histogram (the
+    # units interleave planes, so the series lives in a local histogram
+    # rather than any one plane's stats)
+    lat_hist = StreamingHistogram()
+    lat_hist.observe_all(t / fuse for t in lat)
     cstats = controller.stats()
     stats = {
         "planes": planes,
@@ -317,8 +334,8 @@ def run_controller_serve(planes=2, steps=200, locality="high",
         # wall-clock throughput net of controller cycle time: summed
         # per-unit latencies would double-count overlap under inflight>1
         "req_per_s": served * planes * batch_size / serve_wall,
-        "p50_ms": float(np.percentile(lat, 50) * 1e3),
-        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "p50_ms": lat_hist.quantile(0.50) * 1e3,
+        "p99_ms": lat_hist.quantile(0.99) * 1e3,
         "wall_s": wall,
         "controller": cstats,
     }
@@ -344,6 +361,167 @@ def run_controller_serve(planes=2, steps=200, locality="high",
               f"recompiles={cstats.totals.get('recompiles', 0)}",
               flush=True)
     return stats, controller, rts
+
+
+def _plane_request_stats(rt) -> dict:
+    """Per-plane request-level digest: counters + SLO attainment +
+    latency quantiles from the shared histogram series."""
+    s = rt.stats
+    deadlined = s.slo_met + s.slo_missed
+    return {
+        "completed": s.requests_completed,
+        "rejected": s.requests_rejected,
+        "shed": s.requests_shed,
+        "slo_met": s.slo_met,
+        "slo_missed": s.slo_missed,
+        "slo_attainment": (s.slo_met / deadlined) if deadlined else None,
+        "p50_ms": s.quantile("request_total_s", 0.50) * 1e3,
+        "p99_ms": s.quantile("request_total_s", 0.99) * 1e3,
+        "queue_p99_ms": s.quantile("request_queue_wait_s", 0.99) * 1e3,
+        "batches": s.batches_formed,
+        "pad_rows": s.pad_rows,
+        "mispredicts": s.shape_mispredicts,
+        "deopt_steps": s.deopt_steps,
+        "batch_shape": plan_batch_shape(rt.plan),
+    }
+
+
+def run_frontend_serve(planes=1, requests=600, rate=150.0,
+                       arrival="poisson", batch_size=8, slo_ms=100.0,
+                       max_wait_ms=2.0, queue_cap=512, window_k_max=4,
+                       inflight=2, recompile_every_s=0.25,
+                       locality="high", skew_router=True, quiet=False,
+                       serve_cfg=None, mesh="auto", workers=2,
+                       xla_cache_dir=None, seed=0, keep_outputs=False):
+    """Request-level serving: open-loop synthetic arrivals (Poisson or
+    bursty ON/OFF at ``rate`` req/s) through one
+    :class:`~repro.serving.frontend.ServingFrontend` per plane, all
+    planes under ONE controller.  The whole Morpheus loop runs end to
+    end in-process: arrivals -> admission -> dynamic batching -> fused
+    ``step_many`` dispatch -> arrival-profile snapshot -> recompile ->
+    BatchShapePass bucket/K selection -> (on drift) program-guard deopt.
+
+    Returns ``(stats, controller, runtimes, frontends)`` — ``stats``
+    carries per-plane AND fleet-level SLO attainment."""
+    cfg = serve_cfg or ServeConfig()
+    key = jax.random.PRNGKey(seed)
+    params = _skewed_params(cfg, key, skew_router)
+    if mesh == "auto":
+        mesh = data_plane_mesh()
+    elif mesh == "none":
+        mesh = None
+    controller = MorpheusController(ControllerConfig(workers=workers))
+    ecfg_kw = dict(
+        sketch=SketchConfig(sample_every=4, max_hot=4, hot_coverage=0.8),
+        moe_router_table="router",
+        mesh=mesh, cache_ns="serve-fleet",
+        xla_cache_dir=xla_cache_dir)
+    fcfg = FrontendConfig(capacity=queue_cap, max_batch=batch_size,
+                          max_wait_s=max_wait_ms * 1e-3,
+                          window_k_max=window_k_max, inflight=inflight,
+                          default_slo_s=slo_ms * 1e-3)
+    rts, frontends = [], []
+    for p, (step_fn, tables) in enumerate(build_fleet(cfg, key, planes)):
+        ecfg = EngineConfig(features={"vision_enabled": False,
+                                      "track_sessions": True},
+                            **ecfg_kw)
+        rt = MorpheusRuntime(step_fn, tables, params,
+                             make_synthetic_batch(cfg, key, batch_size),
+                             cfg=ecfg, controller=controller,
+                             plane_id=f"plane-{p}")
+        rts.append(rt)
+        frontends.append(ServingFrontend(rt, fcfg,
+                                         keep_outputs=keep_outputs))
+
+    # ---- warm every window shape the batcher can form: each ladder
+    # bucket at K=1 plus the primary bucket at K=2..k_max, through
+    # MorpheusRuntime.warm_fused — which compiles the active plan, its
+    # instrumented twin AND the generic deopt target per shape (shared
+    # once per fleet thanks to cache_ns).  Without the twin warm, the
+    # first *sampled* window per shape pays its t2 inline and a short
+    # open-loop trace sheds its whole queue behind the stall. ----
+    ladder = fcfg.ladder_resolved()
+    warm_rows = make_request_rows(cfg, key, ladder[-1],
+                                  locality=locality)
+    for rt in rts:
+        for b in ladder:
+            batch = make_request_batch(warm_rows[:b], b)
+            rt.warm_fused([batch])
+        primary = make_request_batch(warm_rows, ladder[-1])
+        for k in range(2, fcfg.window_k_max + 1):
+            rt.warm_fused([primary] * k)
+
+    # ---- the open-loop arrival trace ----
+    gap_fn = {"poisson": poisson_gaps, "onoff": bursty_onoff_gaps}
+    gaps = gap_fn[arrival](rate, requests, seed=seed)
+    rows = make_request_rows(cfg, jax.random.PRNGKey(seed + 1), requests,
+                             locality=locality)
+    driver = OpenLoopDriver(frontends, rows, gaps,
+                            deadline_s=slo_ms * 1e-3)
+
+    for fe in frontends:
+        fe.start()
+    t_start = time.time()
+    driver.start()
+    # recompile ticker: periodic non-blocking schedule_all while the
+    # trace replays — the Morpheus control loop running beside serving
+    while driver._thread is not None and driver._thread.is_alive():
+        time.sleep(recompile_every_s)
+        controller.schedule_all()
+    driver.join()
+    for fe in frontends:
+        fe.drain(timeout=120.0)
+    wall = max(time.time() - t_start, 1e-9)
+    controller.schedule_all()
+    controller.drain()
+    for fe in frontends:
+        fe.stop(drain=True)
+
+    # ---- per-plane + fleet accounting ----
+    per_plane = {rt.plane_id: _plane_request_stats(rt) for rt in rts}
+    fleet_hist = StreamingHistogram()
+    for rt in rts:
+        h = rt.stats.hist("request_total_s")
+        if h is not None:
+            fleet_hist.merge(h)
+    met = sum(ps["slo_met"] for ps in per_plane.values())
+    missed = sum(ps["slo_missed"] for ps in per_plane.values())
+    completed = sum(ps["completed"] for ps in per_plane.values())
+    stats = {
+        "planes": planes,
+        "arrival": arrival,
+        "rate_req_s": rate,
+        "requests": requests,
+        "wall_s": wall,
+        "completed": completed,
+        "rejected": sum(ps["rejected"] for ps in per_plane.values()),
+        "shed": sum(ps["shed"] for ps in per_plane.values()),
+        "goodput_req_s": met / wall,
+        "slo_attainment": (met / (met + missed)) if met + missed else None,
+        "p50_ms": fleet_hist.quantile(0.50) * 1e3,
+        "p99_ms": fleet_hist.quantile(0.99) * 1e3,
+        "per_plane": per_plane,
+    }
+    if not quiet:
+        for pid, ps in per_plane.items():
+            att = (f"{ps['slo_attainment']*100:.1f}%"
+                   if ps["slo_attainment"] is not None else "n/a")
+            print(f"[serve]   {pid}: completed={ps['completed']} "
+                  f"rejected={ps['rejected']} shed={ps['shed']} "
+                  f"slo={att} p50={ps['p50_ms']:.1f}ms "
+                  f"p99={ps['p99_ms']:.1f}ms "
+                  f"queue_p99={ps['queue_p99_ms']:.1f}ms "
+                  f"batch_shape={ps['batch_shape']} "
+                  f"mispredicts={ps['mispredicts']} "
+                  f"deopt={ps['deopt_steps']}", flush=True)
+        att = (f"{stats['slo_attainment']*100:.1f}%"
+               if stats["slo_attainment"] is not None else "n/a")
+        print(f"[serve] fleet: planes={planes} arrival={arrival} "
+              f"offered={rate:.0f} req/s completed={completed} "
+              f"goodput={stats['goodput_req_s']:.1f} req/s "
+              f"slo={att} p50={stats['p50_ms']:.1f}ms "
+              f"p99={stats['p99_ms']:.1f}ms", flush=True)
+    return stats, controller, rts, frontends
 
 
 def main(argv=None) -> int:
@@ -377,11 +555,48 @@ def main(argv=None) -> int:
                     help="bounded-in-flight pipelined serve loop: keep "
                          "up to N dispatched steps/windows in flight "
                          "instead of block_until_ready per step")
+    fr = ap.add_argument_group(
+        "frontend", "request-level serving (open-loop arrivals through "
+        "the repro.serving.frontend queue/batcher instead of pre-formed "
+        "batches; combines with --planes N)")
+    fr.add_argument("--frontend", action="store_true",
+                    help="serve synthetic open-loop request arrivals "
+                         "through the serving frontend")
+    fr.add_argument("--requests", type=int, default=600,
+                    help="number of requests in the arrival trace")
+    fr.add_argument("--rate", type=float, default=150.0,
+                    help="offered load in requests/sec")
+    fr.add_argument("--arrival", default="poisson",
+                    choices=["poisson", "onoff"],
+                    help="arrival process: memoryless Poisson, or "
+                         "bursty ON/OFF at the same long-run rate")
+    fr.add_argument("--slo-ms", type=float, default=100.0,
+                    help="per-request deadline (SLO), milliseconds")
+    fr.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="batch-formation wait budget, milliseconds")
+    fr.add_argument("--queue-cap", type=int, default=512,
+                    help="request queue bound (admission control)")
     args = ap.parse_args(argv)
     if args.fuse < 1 or args.inflight < 1:
         print("[serve] --fuse and --inflight must be >= 1",
               file=sys.stderr)
         return 2
+    if args.frontend:
+        if args.no_morpheus:
+            print("[serve] --no-morpheus does not combine with "
+                  "--frontend (use FrontendConfig against a disabled "
+                  "runtime in code for that baseline)",
+                  file=sys.stderr)
+            return 2
+        _, controller, rts, _ = run_frontend_serve(
+            planes=args.planes, requests=args.requests, rate=args.rate,
+            arrival=args.arrival, batch_size=args.batch_size,
+            slo_ms=args.slo_ms, max_wait_ms=args.max_wait_ms,
+            queue_cap=args.queue_cap, inflight=args.inflight,
+            mesh=args.mesh, workers=args.workers,
+            xla_cache_dir=args.xla_cache_dir)
+        controller.close()
+        return 0
     if args.planes > 1 or args.controller:
         if args.no_morpheus:
             print("[serve] --no-morpheus is a single-plane baseline "

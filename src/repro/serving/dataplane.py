@@ -228,7 +228,7 @@ MorpheusController`: a list of ``(step_fn, tables)`` pairs with
             for _ in range(n_planes)]
 
 
-def make_request_batch(cfg: ServeConfig, key, batch_size=8,
+def make_synthetic_batch(cfg: ServeConfig, key, batch_size=8,
                        locality: str = "high", hot_classes=4,
                        hot_offset: int = 0, hot_slots: int = 0,
                        slot_offset: int = 0):
@@ -255,13 +255,65 @@ def make_request_batch(cfg: ServeConfig, key, batch_size=8,
             "slot": slot.astype(jnp.int32)}
 
 
+def make_request_rows(cfg: ServeConfig, key, n: int, **kw) -> list:
+    """N single-request payloads (each field without the batch dim) —
+    what the serving frontend's :class:`Request.payload` carries.  Drawn
+    from the same synthetic trace as :func:`make_synthetic_batch`
+    (``kw`` forwards locality / hot_offset / ...), so frontend-driven
+    benchmarks see the paper's locality mixes at request granularity."""
+    batch = make_synthetic_batch(cfg, key, batch_size=n, **kw)
+    batch = jax.tree.map(np.asarray, batch)
+    return [{f: v[i] for f, v in batch.items()} for i in range(n)]
+
+
+def make_request_batch(rows, bucket: int):
+    """Pack a ragged list of per-request payload rows into one padded
+    batch of leading dim ``bucket``, with an explicit validity mask.
+
+    ``rows`` are single-request dicts (no batch dim, e.g. from
+    :func:`make_request_rows` or ``Request.payload``); ``bucket`` must
+    be >= ``len(rows)``.  Returns the batch dict with every payload
+    field stacked+padded to ``(bucket, ...)`` plus a ``"valid"`` leaf —
+    a ``(bucket,)`` bool mask that is True for the real rows.
+
+    Padding rows REPLICATE row 0 rather than holding zeros: every pad
+    row is then a well-formed request over live table keys, and — the
+    subtle part — any RW scatter the data plane performs (the sessions
+    table's ``.at[slot].set``) sees *identical* values on the duplicated
+    slot indices, which XLA defines to be deterministic.  Masked rows
+    therefore never perturb the outputs of real rows (asserted by
+    tests/test_frontend.py), and the mask itself is consumed host-side
+    at fan-back — the data plane never branches on it, so the pad rows
+    are pure, bounded overhead exactly like Morpheus' generic fallback
+    rows."""
+    n = len(rows)
+    if n == 0:
+        raise ValueError("make_request_batch: empty request list")
+    if n > bucket:
+        raise ValueError(
+            f"make_request_batch: {n} requests exceed bucket={bucket}")
+    fields = rows[0].keys()
+    out = {}
+    for f in fields:
+        stacked = np.stack([np.asarray(r[f]) for r in rows])
+        if n < bucket:
+            pad = np.broadcast_to(stacked[:1],
+                                  (bucket - n,) + stacked.shape[1:])
+            stacked = np.concatenate([stacked, pad], axis=0)
+        out[f] = jnp.asarray(stacked)
+    valid = np.zeros(bucket, bool)
+    valid[:n] = True
+    out["valid"] = jnp.asarray(valid)
+    return out
+
+
 def make_request_windows(cfg: ServeConfig, key, k: int, batch_size=8,
                          **kw) -> list:
     """K consecutive request batches for one fused serving window
     (``MorpheusRuntime.step_many`` /
     ``runtime.place_batch(..., fused=True)``): the same synthetic trace
-    as :func:`make_request_batch`, split across K independent subkeys so
+    as :func:`make_synthetic_batch`, split across K independent subkeys so
     a fused window sees the same traffic *distribution* as K single
     steps.  ``kw`` forwards (locality / hot_offset / ...)."""
-    return [make_request_batch(cfg, kk, batch_size, **kw)
+    return [make_synthetic_batch(cfg, kk, batch_size, **kw)
             for kk in jax.random.split(key, k)]

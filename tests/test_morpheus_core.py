@@ -11,7 +11,7 @@ from repro.core.passes.const_prop import constant_fields, propose_const_row
 from repro.core.passes.dstruct import lookup_cost, propose_dstruct
 from repro.core.passes.table_jit import propose_eliminate, propose_inline
 from repro.serving import ServeConfig, build_params, build_tables, \
-    make_request_batch, make_serve_step
+    make_synthetic_batch, make_serve_step
 
 KEY = jax.random.PRNGKey(0)
 SK = SketchConfig(sample_every=2, max_hot=4, hot_coverage=0.5)
@@ -122,7 +122,7 @@ def runtime():
                                   "track_sessions": True},
                         moe_router_table="router")
     rt = MorpheusRuntime(step, tables, params,
-                         make_request_batch(cfg, KEY), cfg=ecfg)
+                         make_synthetic_batch(cfg, KEY), cfg=ecfg)
     rt._serve_cfg = cfg
     return rt
 
@@ -136,10 +136,10 @@ def test_analysis_classifies_tables(runtime):
 def test_specialization_preserves_semantics(runtime):
     cfg = runtime._serve_cfg
     for i in range(6):
-        runtime.step(make_request_batch(cfg, jax.random.PRNGKey(i)))
+        runtime.step(make_synthetic_batch(cfg, jax.random.PRNGKey(i)))
     runtime.recompile(block=True)
     assert runtime.plan.label.startswith("specialized")
-    batch = make_request_batch(cfg, jax.random.PRNGKey(77))
+    batch = make_synthetic_batch(cfg, jax.random.PRNGKey(77))
     out_s = runtime.step(batch)
     out_g = runtime.run_generic(batch)
     np.testing.assert_allclose(np.asarray(out_s), np.asarray(out_g),
@@ -160,7 +160,7 @@ def test_guard_elision_ro_sites(runtime):
 
 def test_program_guard_deopt_and_recovery(runtime):
     cfg = runtime._serve_cfg
-    batch = make_request_batch(cfg, jax.random.PRNGKey(5))
+    batch = make_synthetic_batch(cfg, jax.random.PRNGKey(5))
     runtime.recompile(block=True)
     d0 = runtime.stats.deopt_steps
     runtime.control_update(
@@ -182,7 +182,7 @@ def test_dead_code_flag_shrinks_program(runtime):
     import dataclasses
     plan_on = dataclasses.replace(
         plan_off, flags={**plan_off.flags, "vision_enabled": True})
-    batch = make_request_batch(cfg, KEY)
+    batch = make_synthetic_batch(cfg, KEY)
     args = (runtime.params, runtime.state, batch)
     jx_off = jax.make_jaxpr(eng.make_step_fn(plan_off))(*args)
     jx_on = jax.make_jaxpr(eng.make_step_fn(plan_on))(*args)
@@ -191,7 +191,7 @@ def test_dead_code_flag_shrinks_program(runtime):
 
 def test_rw_update_invalidates_site_guard(runtime):
     cfg = runtime._serve_cfg
-    batch = make_request_batch(cfg, KEY)
+    batch = make_synthetic_batch(cfg, KEY)
     runtime.state = runtime.state.replace(
         guards=runtime.engine.init_guards())
     assert int(runtime.state.guards["sessions"][0]) == 0

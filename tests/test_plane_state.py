@@ -12,7 +12,7 @@ from repro.core import DataPlaneCtx, EngineConfig, MorpheusEngine, \
     default_registry
 from repro.core.tables import CallSite
 from repro.serving import ServeConfig, build_params, build_tables, \
-    make_request_batch, make_serve_step
+    make_synthetic_batch, make_serve_step
 
 KEY = jax.random.PRNGKey(0)
 SK = SketchConfig(sample_every=2, max_hot=4, hot_coverage=0.5)
@@ -29,7 +29,7 @@ def engine():
                      features={"vision_enabled": False,
                                "track_sessions": True},
                      moe_router_table="router"))
-    batch = make_request_batch(cfg, KEY)
+    batch = make_synthetic_batch(cfg, KEY)
     eng.analyze(params, batch)
     return cfg, eng, params, batch
 
@@ -168,7 +168,7 @@ def test_custom_pass_claims_site_first(engine):
     eng = MorpheusEngine(
         make_serve_step(cfg_s), tables,
         EngineConfig(sketch=SK, passes=reg, moe_router_table="router"))
-    batch = make_request_batch(cfg_s, KEY)
+    batch = make_synthetic_batch(cfg_s, KEY)
     eng.analyze(params, batch)
     plan, _, stats = eng.build_plan({})
     assert stats["pin_gather"] >= 1
@@ -188,13 +188,13 @@ def test_moe_pass_emits_site_spec_not_flag(engine):
     from repro.core import MorpheusRuntime
     rt = MorpheusRuntime(
         make_serve_step(cfg_s), build_tables(cfg_s, KEY), params,
-        make_request_batch(cfg_s, KEY),
+        make_synthetic_batch(cfg_s, KEY),
         cfg=EngineConfig(sketch=SK,
                          features={"vision_enabled": False,
                                    "track_sessions": True},
                          moe_router_table="router"))
     for i in range(8):
-        rt.step(make_request_batch(cfg_s, jax.random.PRNGKey(i), 8,
+        rt.step(make_synthetic_batch(cfg_s, jax.random.PRNGKey(i), 8,
                                    "high"))
     rt.recompile(block=True)
     hot = rt.hot_experts()

@@ -94,7 +94,7 @@ def test_sharded_plan_identical_to_single_device():
     from repro.core import EngineConfig, MorpheusRuntime, SketchConfig
     from repro.distributed.meshctx import data_plane_mesh
     from repro.serving import ServeConfig, build_params, build_tables, \\
-        make_request_batch, make_serve_step
+        make_synthetic_batch, make_serve_step
 
     cfg = ServeConfig()
     key = jax.random.PRNGKey(0)
@@ -111,14 +111,14 @@ def test_sharded_plan_identical_to_single_device():
             features={"vision_enabled": False, "track_sessions": True},
             moe_router_table="router", mesh=mesh)
         return MorpheusRuntime(make_serve_step(cfg), build_tables(cfg, key),
-                               params, make_request_batch(cfg, key),
+                               params, make_synthetic_batch(cfg, key),
                                cfg=ecfg)
 
     mesh = data_plane_mesh()
     assert mesh is not None and mesh.size == 4
     rt1, rt4 = make_rt(None), make_rt(mesh)
     for i in range(12):
-        b = make_request_batch(cfg, jax.random.PRNGKey(i), 8, "high")
+        b = make_synthetic_batch(cfg, jax.random.PRNGKey(i), 8, "high")
         rt1.step(b)
         rt4.step(b)
     info1 = rt1.recompile(block=True)
@@ -128,7 +128,7 @@ def test_sharded_plan_identical_to_single_device():
     assert info1["pass_stats"] == info4["pass_stats"]
 
     # and both still agree with the generic oracle on outputs
-    b = make_request_batch(cfg, jax.random.PRNGKey(99), 8, "high")
+    b = make_synthetic_batch(cfg, jax.random.PRNGKey(99), 8, "high")
     o4 = rt4.step(b)
     g4 = rt4.run_generic(b)
     err = float(jnp.abs(o4 - g4).max())
@@ -174,8 +174,8 @@ def test_control_update_on_mesh_deopts_then_respecializes():
     rt.control_update("req_class",
                       {"temperature": np.full(4, 2.0, np.float32)})
     assert rt.tables.version != rt.plan.version     # guard will deopt
-    from repro.serving import ServeConfig, make_request_batch
-    b = make_request_batch(ServeConfig(), jax.random.PRNGKey(5), 8)
+    from repro.serving import ServeConfig, make_synthetic_batch
+    b = make_synthetic_batch(ServeConfig(), jax.random.PRNGKey(5), 8)
     rt.step(b)
     assert rt.stats.deopt_steps >= 1
     rt.recompile(block=True)

@@ -9,7 +9,7 @@ import pytest
 from repro.core import EngineConfig, MorpheusRuntime, SketchConfig, Table, \
     TableSet, TableSnapshotWorker
 from repro.serving import ServeConfig, build_params, build_tables, \
-    make_request_batch, make_serve_step
+    make_synthetic_batch, make_serve_step
 
 
 def _tables(n=4):
@@ -119,7 +119,7 @@ def runtime():
     key = jax.random.PRNGKey(0)
     rt = MorpheusRuntime(
         make_serve_step(cfg), build_tables(cfg, key),
-        build_params(cfg, key), make_request_batch(cfg, key),
+        build_params(cfg, key), make_synthetic_batch(cfg, key),
         cfg=EngineConfig(sketch=SketchConfig(sample_every=2, max_hot=4,
                                              hot_coverage=0.5),
                          features={"vision_enabled": False,
@@ -134,7 +134,7 @@ def test_recompile_t1_snapshot_off_caller_thread(runtime):
     t1 table snapshot on the control-plane caller's thread."""
     cfg, rt = runtime
     for i in range(4):
-        rt.step(make_request_batch(cfg, jax.random.PRNGKey(i), 8))
+        rt.step(make_synthetic_batch(cfg, jax.random.PRNGKey(i), 8))
     info = rt.recompile(block=True)
     assert info is not None
     snap = rt.last_snapshot
@@ -175,5 +175,5 @@ def test_close_is_final_and_idempotent(runtime):
         rt.recompile(block=True)
     rt.close()                                # idempotent
     # the data plane keeps serving
-    out = rt.step(make_request_batch(cfg, jax.random.PRNGKey(7), 8))
+    out = rt.step(make_synthetic_batch(cfg, jax.random.PRNGKey(7), 8))
     assert np.isfinite(np.asarray(out)).all()

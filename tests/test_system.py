@@ -18,7 +18,7 @@ import pytest
 
 from repro.core import EngineConfig, MorpheusRuntime, SketchConfig
 from repro.serving import ServeConfig, build_params, build_tables, \
-    make_request_batch, make_serve_step
+    make_synthetic_batch, make_serve_step
 
 
 @pytest.fixture(scope="module")
@@ -35,7 +35,7 @@ def system():
     tables = build_tables(cfg, key, uniform_temperature=False)
     rt = MorpheusRuntime(
         make_serve_step(cfg), tables, params,
-        make_request_batch(cfg, key),
+        make_synthetic_batch(cfg, key),
         cfg=EngineConfig(
             sketch=SketchConfig(sample_every=2, max_hot=4,
                                 hot_coverage=0.6),
@@ -47,7 +47,7 @@ def system():
 def _median_step_time(rt, cfg, n=30, seed0=100):
     ts = []
     for i in range(n):
-        b = make_request_batch(cfg, jax.random.PRNGKey(seed0 + i), 8,
+        b = make_synthetic_batch(cfg, jax.random.PRNGKey(seed0 + i), 8,
                                "high")
         t0 = time.time()
         jax.block_until_ready(rt.step(b))
@@ -68,7 +68,7 @@ def test_specialization_speeds_up_skewed_traffic(system):
 def test_specialization_is_semantics_preserving(system):
     cfg, rt = system
     rt.recompile(block=True)
-    b = make_request_batch(cfg, jax.random.PRNGKey(4242), 8, "high")
+    b = make_synthetic_batch(cfg, jax.random.PRNGKey(4242), 8, "high")
     out_s = rt.step(b)
     out_g = rt.run_generic(b)
     np.testing.assert_allclose(np.asarray(out_s), np.asarray(out_g),
@@ -81,7 +81,7 @@ def test_control_plane_update_deopt_and_recover(system):
     d0 = rt.stats.deopt_steps
     rt.control_update("req_class", {"temperature": np.full(
         cfg.n_classes, 1.7, np.float32)})
-    b = make_request_batch(cfg, jax.random.PRNGKey(7), 8, "high")
+    b = make_synthetic_batch(cfg, jax.random.PRNGKey(7), 8, "high")
     out_deopt = rt.step(b)
     assert rt.stats.deopt_steps == d0 + 1
     rt.recompile(block=True)
@@ -101,13 +101,13 @@ def test_unsupervised_adaptation_to_drift(system):
         0.5, 1.5, cfg.n_classes).astype(np.float32)})
     # phase A traffic
     for i in range(12):
-        rt.step(make_request_batch(cfg, jax.random.PRNGKey(i), 8, "high",
+        rt.step(make_synthetic_batch(cfg, jax.random.PRNGKey(i), 8, "high",
                                    hot_offset=0))
     rt.recompile(block=True)
     plan_a = rt.plan.sites
     # drift: new hot classes/tokens
     for i in range(12):
-        rt.step(make_request_batch(cfg, jax.random.PRNGKey(500 + i), 8,
+        rt.step(make_synthetic_batch(cfg, jax.random.PRNGKey(500 + i), 8,
                                    "high", hot_offset=17))
     rt.recompile(block=True)
     plan_b = rt.plan.sites
