@@ -1,0 +1,139 @@
+"""Arch-zoo benchmark — specialized-vs-generic serving speedup and plan
+determinism across the ten assigned architectures.
+
+For each arch the conformance plane (``repro.testing.archzoo``) is
+instantiated at smoke scale and driven through the canonical warmup
+(pinned sampling, seeded batches, one blocking recompile).  Steady-state
+``step`` latency is then measured on the specialized runtime and on its
+generic oracle (dead-code-only registry — every lookup a plain gather),
+over the identical batch stream.  Alongside the speedup, each arch
+records its specialized site count, the impl set the plan selected
+(``ssd_fastpath`` on the SSM archs, ``moe_fastpath`` on the MoE archs,
+...), and a *determinism* bit: a second, freshly built pair replays the
+identical warmup and must plan a byte-identical signature fingerprint.
+
+``json_record()`` feeds ``BENCH_archzoo.json`` (written by ``run.py``
+and the CI bench-smoke job).  ``main`` exits nonzero if any arch serves
+only generic code (zero specialized sites) or replans a different
+fingerprint — the bench doubles as the CI tripwire for silent
+specialization regressions.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.configs import ARCH_IDS
+from repro.testing import plan_fingerprint
+from repro.testing.archzoo import build_plane, make_batch
+from repro.testing.conformance import _Pair
+
+from ._util import time_steps, emit
+
+_LAST: dict = {}
+
+TINY_ARCHS = ("llama3-8b", "mamba2-1.3b", "phi3.5-moe-42b-a6.6b")
+
+
+def _warmed_pair(plane, seed: int, warmup: int):
+    """A fresh conformance pair after the canonical warmup: ``warmup``
+    seeded batches on both sides, then one blocking recompile."""
+    pair = _Pair(plane, seed)
+    rng = np.random.default_rng(seed + 1)
+    for _ in range(warmup):
+        b = make_batch(plane, rng)
+        pair.spec.step(b)
+        pair.oracle.step(b)
+    pair.recompile()
+    return pair
+
+
+def _bench_arch(arch: str, seed: int, warmup: int, steps: int) -> dict:
+    plane = build_plane(arch)
+    pair = _warmed_pair(plane, seed, warmup)
+    try:
+        fp = plan_fingerprint(pair.spec.plan)
+        rng = np.random.default_rng(seed + 2)
+        batches = [make_batch(plane, rng) for _ in range(steps + 3)]
+        t_spec = time_steps(pair.spec.step, batches)
+        t_gen = time_steps(pair.oracle.step, batches)
+        sites = [(sid, s.impl) for sid, s in pair.spec.plan.sites]
+    finally:
+        pair.close()
+    # determinism: an independent pair replaying the identical warmup
+    # must plan the identical signature
+    pair2 = _warmed_pair(plane, seed, warmup)
+    try:
+        fp2 = plan_fingerprint(pair2.spec.plan)
+    finally:
+        pair2.close()
+    spec_s = float(np.median(t_spec))
+    gen_s = float(np.median(t_gen))
+    return {
+        "spec_step_s_median": spec_s,
+        "generic_step_s_median": gen_s,
+        "speedup": gen_s / max(spec_s, 1e-9),
+        "n_sites": len(sites),
+        "n_specialized_sites": sum(1 for _, i in sites
+                                   if i != "gather"),
+        "impls": sorted({i for _, i in sites}),
+        "fingerprint": fp,
+        "deterministic": fp == fp2,
+    }
+
+
+def run(tiny: bool = False) -> list:
+    archs = TINY_ARCHS if tiny else ARCH_IDS
+    warmup = 10 if tiny else 14
+    steps = 8 if tiny else 20
+    rows, per_arch = [], {}
+    for arch in archs:
+        r = _bench_arch(arch, seed=0, warmup=warmup, steps=steps)
+        per_arch[arch] = r
+        rows.append((
+            f"archzoo/{arch}/specialized", r["spec_step_s_median"] * 1e6,
+            f"speedup={r['speedup']:.2f}x"
+            f";sites={r['n_specialized_sites']}/{r['n_sites']}"
+            f";deterministic={int(r['deterministic'])}"))
+        rows.append((f"archzoo/{arch}/generic",
+                     r["generic_step_s_median"] * 1e6,
+                     "impl=gather-only"))
+    global _LAST
+    _LAST = {"config": {"tiny": tiny, "warmup": warmup, "steps": steps,
+                        "archs": list(archs)},
+             "per_arch": per_arch}
+    return rows
+
+
+def json_record() -> dict:
+    """The machine-readable result of the last :func:`run` call —
+    written to ``BENCH_archzoo.json`` by ``run.py`` and the CI
+    bench-smoke job."""
+    return dict(_LAST)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke configuration (three archs)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the machine-readable record here")
+    args = ap.parse_args(argv)
+    emit(run(tiny=args.tiny))
+    if args.json:
+        Path(args.json).write_text(json.dumps(json_record(), indent=2)
+                                   + "\n")
+    bad = [a for a, r in _LAST["per_arch"].items()
+           if not r["n_specialized_sites"] or not r["deterministic"]]
+    if bad:
+        print(f"# FAIL: generic-only or nondeterministic archs: {bad}",
+              flush=True)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

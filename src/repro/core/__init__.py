@@ -9,7 +9,8 @@ from .histogram import StreamingHistogram
 from .instrument import AdaptiveController, SketchConfig, \
     SketchDoubleBuffer
 from .passes import BATCH_SHAPE_SITE, BatchShapePass, PassRegistry, \
-    SpecializationPass, default_registry, plan_batch_shape
+    SpecializationPass, SSDFastPathPass, default_registry, \
+    plan_batch_shape, ssd_init_state_hotpath
 from .runtime import MorpheusRuntime, RuntimeStats, stack_batches
 from .snapshot import TableSnapshotWorker, VersionedSnapshot
 from .specialize import GENERIC_PLAN, SiteSpec, SpecializationPlan

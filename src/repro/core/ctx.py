@@ -136,9 +136,30 @@ class DataPlaneCtx:
         site (branch injection, §4.3.5), or None when the pass did not
         fire.  A trace-time constant: the caller's hot path is compiled in
         or left out entirely."""
+        return self.fastpath_keys(table, "moe_fastpath")
+
+    def fastpath_keys(self, table: str, impl: str = "moe_fastpath"
+                      ) -> Optional[Tuple[int, ...]]:
+        """Hot set a branch-injection pass (``moe_fastpath``,
+        ``ssd_fastpath``, ...) planned for one of ``table``'s lookup
+        sites, or None when the pass did not fire.  A trace-time
+        constant, like :meth:`hot_experts`."""
         if self.plan is None:
             return None
-        return self.plan.hot_experts(table)
+        return self.plan.fastpath_keys(table, impl)
+
+    def table_array(self, name: str, field: str) -> jax.Array:
+        """Raw read of one field's full backing array (current in-trace
+        contents, including prior ``update`` writes).  For
+        branch-injected code ONLY: a ``lax.cond`` slow branch gathering
+        rows the fast branch provably does not need must not go through
+        :meth:`lookup` — a lookup inside one branch would register a
+        call site (and record instrumentation) that the other branch
+        lacks.  No site is registered and nothing is recorded here; the
+        sanctioned callers pair this with an unconditional cheap lookup
+        (e.g. the SSD fast path's ``count`` site) that keeps the table
+        instrumented."""
+        return self.tables[name][field]
 
     def outputs(self) -> PlaneState:
         """The step's output :class:`PlaneState`: tables (with any

@@ -56,6 +56,7 @@ class EngineConfig:
     sketch: SketchConfig = field(default_factory=SketchConfig)
     features: Dict[str, bool] = field(default_factory=dict)
     moe_router_table: Optional[str] = None   # table backing MoE routing
+    ssd_state_table: Optional[str] = None    # table backing SSM state
     passes: Optional[PassRegistry] = None    # None => default_registry
     donate: bool = True                      # donate PlaneState buffers
     mesh: Optional[Any] = None               # jax Mesh => sharded serving
@@ -94,7 +95,8 @@ class MorpheusEngine:
         self.tables = tables
         self.cfg = cfg or EngineConfig()
         self.registry = (self.cfg.passes if self.cfg.passes is not None
-                         else default_registry(self.cfg.moe_router_table))
+                         else default_registry(self.cfg.moe_router_table,
+                                               self.cfg.ssd_state_table))
         self.sites = []
         self.mutability: Dict[str, str] = {}
         self._analyzed = False

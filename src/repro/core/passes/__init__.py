@@ -7,8 +7,8 @@ optional plan-level ``finalize``).  The default pipeline composes them in
 priority order:
 
   table elimination > inline JIT > constant propagation >
-  MoE branch injection > traffic-dependent fast path >
-  data-structure specialization
+  MoE branch injection > SSD-scan branch injection >
+  traffic-dependent fast path > data-structure specialization
 
 Dead-code elimination (flag pinning) and guard elision (§4.3.6) are
 plan-level passes that run in ``finalize``.  Operators extend the
@@ -27,10 +27,13 @@ from .fastpath import TrafficFastPathPass
 from .guard_elision import GuardElisionPass
 from .registry import PassRegistry, PlanDraft, PlanInputs, \
     SpecializationPass
+from .ssd_fastpath import SSDFastPathPass, plan_ssd_fastpath, \
+    ssd_init_state_hotpath
 from .table_jit import InlineJITPass, TableEliminationPass
 
 
-def default_registry(moe_router_table: Optional[str] = None
+def default_registry(moe_router_table: Optional[str] = None,
+                     ssd_state_table: Optional[str] = None
                      ) -> PassRegistry:
     """The paper's pipeline, in priority order."""
     return PassRegistry((
@@ -38,6 +41,7 @@ def default_registry(moe_router_table: Optional[str] = None
         InlineJITPass(),
         ConstPropPass(),
         MoEFastPathPass(moe_router_table),
+        SSDFastPathPass(ssd_state_table),
         TrafficFastPathPass(),
         DStructPass(),
         BatchShapePass(),

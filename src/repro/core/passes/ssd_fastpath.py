@@ -1,0 +1,120 @@
+"""Branch injection for SSD-scan state restore — the Mamba2/Jamba
+fast path.
+
+An SSM serving plane keeps per-slot recurrent state in an RW table (the
+``conn_table`` analogue: ``state`` rows plus a ``count`` write counter).
+The generic data plane must gather every batch row's saved state from
+HBM before the chunked SSD scan can run — even though, under
+connection-table flushes and short-lived sessions, the overwhelmingly
+common case is a batch of *fresh* slots whose saved state is all zeros
+(``ssd_scan`` with ``init_state=None`` starts from the zero state, so
+both paths compute bitwise the same numbers).
+
+Like the MoE hot-expert path (§4.3.5), we inject a cheap whole-batch
+predicate BEFORE the expensive generic state restore:
+
+    all(count[slot] == 0) ?  zero init (no state gather at all)
+                          :  gather saved rows from the state table
+
+The predicate is self-guarding: it re-validates per batch on device, so
+slot reuse after the plan was built degrades to the generic restore
+instead of computing garbage.  The *plan-level* claim (this pass) is
+what makes the specialization visible: the site spec's ``hot_keys``
+carry the traffic snapshot's hot slots, so hot-set rotation churns the
+plan signature exactly like every other traffic-dependent pass, and the
+data plane only traces the injected branch when the control plane's
+view of those slots is still fresh.
+
+The pass claims the state table's cheap ``count`` lookup site (which
+stays a plain gather and keeps recording instrumentation every sampled
+step — the wide ``state`` gather is the thing being specialized *away*,
+so it cannot be the instrumented site without starving its own sketch).
+The data plane reads the claim back through
+``ctx.fastpath_keys(table, "ssd_fastpath")`` and builds its init state
+with :func:`ssd_init_state_hotpath`.
+
+Invariant required of the plane: ``count[slot] == 0`` implies the saved
+``state`` row is all zeros — plane writes must bump the counter in the
+same ``ctx.update``, and control-plane writes must either flush both
+(state=0, count=0) or warm both (state!=0, count>0).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..instrument import SketchConfig
+from ..specialize import SiteSpec
+from .registry import SpecializationPass
+
+
+def plan_ssd_fastpath(hot: np.ndarray, coverage: float,
+                      cfg: SketchConfig,
+                      counts: np.ndarray) -> Optional[Tuple[int, ...]]:
+    """Claim when the observed hot slots cover enough traffic AND the
+    control plane's view of every hot slot is still fresh (count == 0).
+    A warmed/restored slot in the hot set means the common case is a
+    state *restore*, not a fresh start — stay generic for this cycle."""
+    if len(hot) == 0 or coverage < cfg.hot_coverage:
+        return None
+    n = counts.shape[0]
+    for k in hot:
+        k = int(k)
+        if k >= n or int(counts[k]) != 0:
+            return None
+    return tuple(int(k) for k in hot)
+
+
+class SSDFastPathPass(SpecializationPass):
+    """Claims the SSM state table's ``count`` lookup site with a
+    ``ssd_fastpath`` SiteSpec whose ``hot_keys`` are the heavy-hitter
+    slots.  The data plane reads the claim back via
+    ``ctx.fastpath_keys(table, "ssd_fastpath")`` and traces the
+    branch-injected zero-init path; the count lookup itself dispatches
+    as a plain gather."""
+
+    name = "ssd_fastpath"
+
+    def __init__(self, state_table: Optional[str],
+                 count_field: str = "count"):
+        self.state_table = state_table
+        self.count_field = count_field
+
+    def match(self, site):
+        return (site.kind == "lookup"
+                and self.state_table is not None
+                and site.table == self.state_table
+                and self.count_field in (site.fields or ()))
+
+    def plan(self, site, snapshot, stats):
+        tab = snapshot.get(self.state_table)
+        if tab is None or self.count_field not in tab.fields:
+            return None
+        hot, coverage = stats.hot_for(site.site_id)
+        counts = np.asarray(tab.fields[self.count_field])
+        keys = plan_ssd_fastpath(hot, coverage, stats.sketch, counts)
+        if keys is None:
+            return None
+        return SiteSpec(impl="ssd_fastpath", hot_keys=keys)
+
+
+def ssd_init_state_hotpath(counts: jax.Array,
+                           gather_state: Callable[[], jax.Array],
+                           shape: Tuple[int, ...]) -> jax.Array:
+    """The injected branch: a whole-batch freshness predicate selecting
+    the SSD scan's initial state.  ``counts`` are the batch slots' write
+    counters (already looked up — the cheap, instrumented site);
+    ``gather_state`` gathers the saved rows from the raw state table
+    (traced only into the slow branch, so the fast branch never touches
+    the wide state array); ``shape`` is the (B, H, P, N) init-state
+    shape.  Exact: fresh slots have all-zero saved rows by the table's
+    write invariant, and ``ssd_scan`` from an explicit zero state is
+    bitwise the zero-init scan."""
+    all_fresh = jnp.all(counts == 0)
+    return jax.lax.cond(
+        all_fresh,
+        lambda: jnp.zeros(shape, jnp.float32),
+        lambda: gather_state().astype(jnp.float32).reshape(shape))

@@ -26,6 +26,7 @@ from ..kernels import ops as kops
 class SiteSpec:
     impl: str = "gather"       # gather | onehot | hot_cache | inline_const
                                # | const_row | eliminated | moe_fastpath
+                               # | ssd_fastpath
     hot_keys: Tuple[int, ...] = ()
     guarded: bool = False      # RW site guard (guard elision decides)
     const_fields: Tuple[Tuple[str, Any], ...] = ()   # const-prop per field
@@ -50,16 +51,26 @@ class SpecializationPlan:
         """The SiteSpec planned for ``site_id`` (None = stay generic)."""
         return self._site_map.get(site_id)
 
-    def hot_experts(self, table: Optional[str] = None
-                    ) -> Optional[Tuple[int, ...]]:
-        """Hot set the MoE fast-path pass planned for ``table`` (any
-        table when None), or None when no such site was specialized."""
+    def fastpath_keys(self, table: Optional[str] = None,
+                      impl: str = "moe_fastpath"
+                      ) -> Optional[Tuple[int, ...]]:
+        """Hot set a branch-injection pass (``moe_fastpath``,
+        ``ssd_fastpath``, ...) planned for one of ``table``'s lookup
+        sites (any table when None), or None when no such site was
+        specialized.  A trace-time constant — the caller compiles its
+        injected branch in or leaves it out entirely."""
         for sid, spec in self.sites:
-            if spec.impl != "moe_fastpath":
+            if spec.impl != impl:
                 continue
             if table is None or sid.split("#")[0] == table:
                 return spec.hot_keys or None
         return None
+
+    def hot_experts(self, table: Optional[str] = None
+                    ) -> Optional[Tuple[int, ...]]:
+        """Hot set the MoE fast-path pass planned for ``table`` (any
+        table when None), or None when no such site was specialized."""
+        return self.fastpath_keys(table, "moe_fastpath")
 
     @property
     def signature(self):
@@ -129,9 +140,11 @@ def dispatch_lookup(plan, site_id: str, name: str, table_state, idx,
                     fields, guards):
     state = table_state[name]
     spec = plan.site(site_id) if plan is not None else None
-    if spec is None or spec.impl in ("gather", "moe_fastpath"):
-        # moe_fastpath specializes the *caller's* expert dispatch (branch
-        # injection); the router lookup itself stays a plain gather.
+    if spec is None or spec.impl in ("gather", "moe_fastpath",
+                                     "ssd_fastpath"):
+        # the *_fastpath impls specialize the *caller's* dispatch
+        # (branch injection); the claimed lookup itself stays a plain
+        # gather.
         return _gather(state, idx, fields)
 
     if spec.impl == "eliminated":

@@ -94,6 +94,32 @@ def _ssd_inputs(params, cfg: ModelConfig, xBC: jax.Array, dt: jax.Array):
     return x_in, Bm, Cm, dt, A
 
 
+def mamba_forward_with_state(params, cfg: ModelConfig, x: jax.Array, *,
+                             init_state: Optional[jax.Array] = None
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward threading the SSD recurrent state:
+    ``init_state`` (B, H, P, N) float32 seeds the scan (None = the zero
+    state — bitwise identical to passing explicit zeros) and the final
+    state is always returned alongside the output.  This is the serving
+    entry point for per-slot session state kept in an RW table: gather
+    saved state -> forward -> write final state back."""
+    s, d_inner, H, _ = _dims(cfg)
+    B, S, _ = x.shape
+    z, xBC, dt = _split(params, cfg, x)
+    xBC_conv = _conv_full(params, xBC, s.conv_width)
+    x_in, Bm, Cm, dt_sp, A = _ssd_inputs(params, cfg, xBC_conv, dt)
+    y, final_state = kops.ssd_scan(x_in, dt_sp, A, Bm, Cm, chunk=s.chunk,
+                                   init_state=init_state)
+    y = y + (params["D"].astype(jnp.float32)[:, None] *
+             x_in.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm({"scale": params["norm_scale"]},
+                y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                cfg.rms_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, final_state
+
+
 def mamba_forward(params, cfg: ModelConfig, x: jax.Array, *,
                   cache=None) -> Tuple[jax.Array, Optional[dict]]:
     """Full-sequence forward.  cache (optional) receives the final

@@ -1,0 +1,45 @@
+"""repro.testing — the arch-zoo conformance subsystem.
+
+Morpheus' core safety claim is that runtime specialization is
+*semantics-preserving*: the specialized data plane must be equivalent
+to the generic one under any control-plane update sequence, with guards
+catching every mispredict.  This package makes that claim mechanically
+checkable across the whole config zoo:
+
+  * :mod:`~repro.testing.archzoo` builds, for every config in
+    ``repro.configs.ARCH_IDS`` at ``cfg.smoke()`` scale, a serving
+    *plane*: a ctx-based step function exercising the architecture's
+    distinguishing blocks (SSD scan + per-slot state, MoE hot-expert
+    dispatch, encoder-decoder cross-attention, media-token prepend)
+    against the full Morpheus table cast;
+  * :mod:`~repro.testing.churn` generates seeded churn schedules —
+    control-table updates, flag flips, hot-set rotations, sampling
+    re-arms, fused-window boundaries, frontend batch-shape shifts,
+    injected mispredicts — through an extensible move registry
+    (:func:`~repro.testing.churn.register_churn_move`);
+  * :mod:`~repro.testing.conformance` drives a specialized
+    :class:`~repro.core.runtime.MorpheusRuntime` through a schedule
+    while a lock-stepped generic oracle replays the identical
+    batch/update sequence, asserting outputs and RW table state equal
+    at every step and that every injected mispredict deopts through
+    the program guard;
+  * :mod:`~repro.testing.fingerprint` canonically hashes plan
+    signatures (sha256 over a canonical serialization — never Python
+    ``hash()``, which is per-process salted) and exposes a CLI so plan
+    determinism can be asserted across independent processes.
+
+``tests/test_conformance.py`` runs the arch x serving-mode matrix;
+``benchmarks/bench_archzoo.py`` records per-arch specialized-vs-generic
+speedup and plan determinism to ``BENCH_archzoo.json``.
+"""
+from .archzoo import ArchPlane, build_plane, conformance_engine_config
+from .churn import ChurnEvent, generate_schedule, register_churn_move
+from .conformance import ConformanceError, run_conformance
+from .fingerprint import plan_fingerprint, run_fingerprints
+
+__all__ = [
+    "ArchPlane", "build_plane", "conformance_engine_config",
+    "ChurnEvent", "generate_schedule", "register_churn_move",
+    "ConformanceError", "run_conformance",
+    "plan_fingerprint", "run_fingerprints",
+]

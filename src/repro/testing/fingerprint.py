@@ -1,0 +1,128 @@
+"""Cross-process plan-signature fingerprints.
+
+Morpheus' executable identity is the plan *signature* — the tuple of
+trace-time constants (site specs, pinned flags, instrumented bit).  The
+determinism obligation is that the signature is a pure function of the
+control-plane state and the observed traffic: two independent processes
+fed the identical schedule must plan the identical signature, or the
+executable cache (and any cross-plane sharing keyed on signatures)
+serves wrong code.
+
+``plan_fingerprint`` hashes a signature with sha256 over a canonical
+serialization.  Python ``hash()`` is useless here — it is salted per
+process (PYTHONHASHSEED), which is exactly the nondeterminism this
+module exists to catch.  The serializer handles every value type a
+signature can carry: primitives, (nested) tuples, sorted dicts, and the
+content-hashed ``_Frozen`` numpy wrappers inline-JIT / const-prop put
+into SiteSpecs (serialized as dtype + shape + raw bytes).
+
+``python -m repro.testing.fingerprint [arch ...]`` prints a JSON map
+``{arch: fingerprint}`` for the deterministic warmup scenario below, so
+a test can spawn it under a different ``PYTHONHASHSEED`` and diff
+against an in-process run.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import sys
+from typing import Dict, Iterable, Optional
+
+import numpy as np
+
+
+def _canon(x, out: list) -> None:
+    """Append a canonical, type-tagged byte serialization of ``x``."""
+    if x is None:
+        out.append(b"N")
+    elif isinstance(x, bool):
+        out.append(b"b1" if x else b"b0")
+    elif isinstance(x, int):
+        out.append(b"i" + str(x).encode())
+    elif isinstance(x, float):
+        out.append(b"f" + repr(x).encode())
+    elif isinstance(x, str):
+        e = x.encode()
+        out.append(b"s" + str(len(e)).encode() + b":" + e)
+    elif isinstance(x, bytes):
+        out.append(b"y" + str(len(x)).encode() + b":" + x)
+    elif isinstance(x, (tuple, list)):
+        out.append(b"(")
+        for e in x:
+            _canon(e, out)
+        out.append(b")")
+    elif isinstance(x, dict):
+        out.append(b"{")
+        for k in sorted(x, key=repr):
+            _canon(k, out)
+            _canon(x[k], out)
+        out.append(b"}")
+    elif hasattr(x, "arr"):                    # passes.table_jit._Frozen
+        a = np.asarray(x.arr)
+        out.append(b"A" + str(a.dtype).encode() + b"|"
+                   + repr(a.shape).encode() + b"|" + a.tobytes())
+    elif isinstance(x, np.ndarray):
+        out.append(b"A" + str(x.dtype).encode() + b"|"
+                   + repr(x.shape).encode() + b"|" + x.tobytes())
+    elif hasattr(x, "__dataclass_fields__"):   # SiteSpec and friends
+        out.append(b"D" + type(x).__name__.encode())
+        _canon({f: getattr(x, f) for f in x.__dataclass_fields__}, out)
+    elif isinstance(x, (np.integer,)):
+        _canon(int(x), out)
+    elif isinstance(x, (np.floating,)):
+        _canon(float(x), out)
+    else:
+        raise TypeError(
+            f"plan_fingerprint: unserializable value of type "
+            f"{type(x).__name__!r} in signature: {x!r}")
+
+
+def plan_fingerprint(plan) -> str:
+    """sha256 hex digest of ``plan.signature``'s canonical form."""
+    out: list = []
+    _canon(plan.signature, out)
+    return hashlib.sha256(b"".join(out)).hexdigest()
+
+
+def run_fingerprints(arch_ids: Optional[Iterable[str]] = None,
+                     seed: int = 0, n_steps: int = 12
+                     ) -> Dict[str, str]:
+    """The canonical warmup scenario, one plan per arch: pinned
+    sampling, ``n_steps`` seeded batches, one blocking recompile,
+    fingerprint the planned signature.  Everything feeding the plan —
+    tables, params, batches, sampling cadence — is derived from
+    ``seed``, so the returned map must be process-independent."""
+    from ..configs import ARCH_IDS
+    from .archzoo import build_plane, make_batch
+    from .conformance import _Pair
+
+    fps: Dict[str, str] = {}
+    for arch in (tuple(arch_ids) if arch_ids else ARCH_IDS):
+        plane = build_plane(arch)
+        pair = _Pair(plane, seed)
+        try:
+            rng = np.random.default_rng(seed + 1)
+            for _ in range(n_steps):
+                pair.spec.step(make_batch(plane, rng))
+            pair.recompile()
+            fps[arch] = plan_fingerprint(pair.spec.plan)
+        finally:
+            pair.close()
+    return fps
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    seed = 0
+    if "--seed" in argv:
+        i = argv.index("--seed")
+        seed = int(argv[i + 1])
+        del argv[i:i + 2]
+    json.dump(run_fingerprints(argv or None, seed=seed),
+              sys.stdout, indent=0, sort_keys=True)
+    sys.stdout.write("\n")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,18 +14,25 @@ import pytest
 from repro.configs import ARCH_IDS, get_config
 from repro.models import Model, unzip
 
-KEY = jax.random.PRNGKey(0)
+
+def _key(arch: str) -> jax.Array:
+    """Per-test seed: stable across processes (PRNGKey(0) shared by
+    every test — and reused for every batch field — made tokens and
+    labels identical arrays and batches correlated across archs)."""
+    return jax.random.PRNGKey(ARCH_IDS.index(arch) + 1)
 
 
-def _batch(cfg, B=2, S=16):
-    b = {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab),
-         "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab)}
+def _batch(cfg, key, B=2, S=16):
+    k_tok, k_lab, k_media, k_frames = jax.random.split(key, 4)
+    b = {"tokens": jax.random.randint(k_tok, (B, S), 0, cfg.vocab),
+         "labels": jax.random.randint(k_lab, (B, S), 0, cfg.vocab)}
     if cfg.num_media_tokens:
         b["media"] = jax.random.normal(
-            KEY, (B, cfg.num_media_tokens, cfg.d_model), jnp.bfloat16)
+            k_media, (B, cfg.num_media_tokens, cfg.d_model),
+            jnp.bfloat16)
     if cfg.encdec:
         b["frames"] = jax.random.normal(
-            KEY, (B, max(1, S // cfg.enc_seq_divisor), cfg.d_model),
+            k_frames, (B, max(1, S // cfg.enc_seq_divisor), cfg.d_model),
             jnp.bfloat16)
     return b
 
@@ -34,8 +41,9 @@ def _batch(cfg, B=2, S=16):
 def test_smoke_train_step(arch):
     cfg = get_config(arch).smoke()
     model = Model(cfg)
-    params, _ = unzip(model.init(KEY))
-    batch = _batch(cfg)
+    k_init, k_batch = jax.random.split(_key(arch))
+    params, _ = unzip(model.init(k_init))
+    batch = _batch(cfg, k_batch)
 
     loss, grads = jax.jit(jax.value_and_grad(
         lambda p, b: model.loss(p, b)[0]))(params, batch)
@@ -53,8 +61,9 @@ def test_smoke_train_step(arch):
 def test_smoke_prefill_decode(arch):
     cfg = get_config(arch).smoke()
     model = Model(cfg)
-    params, _ = unzip(model.init(KEY))
-    batch = _batch(cfg, B=2, S=16)
+    k_init, k_batch = jax.random.split(_key(arch))
+    params, _ = unzip(model.init(k_init))
+    batch = _batch(cfg, k_batch, B=2, S=16)
 
     enc_cap = max(1, 16 // cfg.enc_seq_divisor) if cfg.encdec else 0
     cache, _ = unzip(model.init_cache(2, 32, enc_cap=enc_cap))

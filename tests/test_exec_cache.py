@@ -101,6 +101,56 @@ def test_get_or_compile_owner_failure_unwedges_waiters():
     assert c.get("k") == "exe"
 
 
+def test_eviction_racing_inflight_waiter_recompiles():
+    """Eviction racing an in-flight waiter: the owner's insert can be
+    evicted (capacity pressure from another plane) BEFORE a parked
+    waiter re-checks the map.  The waiter must not return None or wedge
+    — it re-loops, finds the key missing, claims ownership and compiles
+    again.  Deterministic schedule: a cache subclass whose ``put``
+    immediately inserts a filler key into a capacity-1 cache, so the
+    owner's entry is always gone by the time the waiter wakes."""
+    class EvictingCache(ExecutableCache):
+        filler_puts = 0
+
+        def put(self, key, exe):
+            super().put(key, exe)
+            if key == "k" and not self.filler_puts:
+                self.filler_puts += 1
+                super().put("filler", "other")   # capacity 1: evicts "k"
+
+    c = EvictingCache(capacity=1)
+    started, gate = threading.Event(), threading.Event()
+    compiles = []
+
+    def compile_fn():
+        compiles.append(1)
+        started.set()
+        assert gate.wait(timeout=10)
+        return f"exe{len(compiles)}", 0.1
+
+    out = []
+    t1 = threading.Thread(
+        target=lambda: out.append(c.get_or_compile("k", compile_fn)))
+    t1.start()
+    assert started.wait(timeout=10)          # owner inside compile_fn
+    t2 = threading.Thread(
+        target=lambda: out.append(c.get_or_compile("k", compile_fn)))
+    t2.start()
+    deadline = time.time() + 10
+    while c.stats.inflight_waits < 1 and time.time() < deadline:
+        time.sleep(0.005)
+    assert c.stats.inflight_waits == 1       # t2 is parked as a waiter
+    gate.set()          # owner inserts; filler evicts it; waiter wakes
+    t1.join(10)
+    t2.join(10)
+    assert len(compiles) == 2                # waiter re-owned the key
+    assert sorted(p[0] for p in out) == ["exe1", "exe2"]
+    assert all(p[1] == 0.1 for p in out)     # both were owners (got aux)
+    assert c.peek("k") == "exe2"             # final entry is valid
+    assert c.stats.evictions >= 2
+    assert not c._inflight                   # no wedged ownership
+
+
 # ---------------------------------------------------------------------------
 # plan identity: signature vs key
 # ---------------------------------------------------------------------------

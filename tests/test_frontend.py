@@ -191,6 +191,38 @@ def test_queue_full_rejects_at_submit():
         rt.close()
 
 
+def test_queue_sheds_deadline_expiring_between_admission_and_take():
+    """The admission/take gap, on the queue itself: a request whose
+    deadline is comfortably in the future at ``submit`` (so admission
+    accepts it) but past by the time the batcher calls ``take`` must
+    come back in the *shed* list — and must NOT consume a ``max_n``
+    batch slot, so a live request behind it in FIFO order still fills
+    the window.  ``now == deadline`` exactly is already late (the
+    answer could not be produced in zero time)."""
+    clock = FakeClock()
+    q = RequestQueue(capacity=8)
+    expiring = Request(id=0, payload="a", arrival_ts=clock(),
+                       deadline=clock() + 0.05)
+    exact = Request(id=1, payload="b", arrival_ts=clock(),
+                    deadline=clock() + 0.10)
+    live = Request(id=2, payload="c", arrival_ts=clock(),
+                   deadline=clock() + 99.0)
+    assert q.submit(expiring) and q.submit(exact) and q.submit(live)
+    assert len(q) == 3
+    clock.advance(0.10)            # expiring now past, exact == now
+    ready, shed = q.take(1, clock())
+    assert [r.id for r in shed] == [0, 1]
+    assert [r.id for r in ready] == [2]    # shed never ate the slot
+    assert len(q) == 0
+    # shed_expired=False: the policy knob hands even late requests out
+    q2 = RequestQueue(capacity=8, shed_expired=False)
+    late = Request(id=3, payload="d", arrival_ts=clock(),
+                   deadline=clock() - 1.0)
+    assert q2.submit(late)
+    ready, shed = q2.take(4, clock())
+    assert [r.id for r in ready] == [3] and shed == []
+
+
 def test_deadline_expired_requests_are_shed():
     rt = _mk_rt()
     try:

@@ -9,10 +9,12 @@ pytest.importorskip(
     reason="hypothesis not installed (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import SketchConfig, instrument
+from repro.core import SketchConfig, StreamingHistogram, instrument
+from repro.core.specialize import SiteSpec, SpecializationPlan
 from repro.kernels import ref as R
 from repro.launch import hlo_analysis as H
 from repro.models.model import cross_entropy
+from repro.testing import plan_fingerprint
 
 SK = SketchConfig(width=256, candidates=64)
 
@@ -79,6 +81,68 @@ def test_vocab_padding_does_not_change_loss(vocab, padded):
     padded_loss = cross_entropy(
         logits.at[..., vocab:].set(1e4), labels, n_valid=vocab)
     np.testing.assert_allclose(float(base), float(padded_loss), rtol=1e-5)
+
+
+_site_specs = st.builds(
+    SiteSpec,
+    impl=st.sampled_from(["gather", "onehot", "hot_cache",
+                          "moe_fastpath", "ssd_fastpath"]),
+    hot_keys=st.lists(st.integers(0, 255), max_size=4).map(tuple),
+    guarded=st.booleans())
+_sites = st.lists(
+    st.tuples(st.sampled_from(["a#0", "a#1", "b#0", "c#0"]),
+              _site_specs),
+    max_size=4, unique_by=lambda s: s[0]).map(tuple)
+_flags = st.dictionaries(st.sampled_from(["f1", "f2", "f3"]),
+                         st.booleans(), max_size=3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(_sites, _flags, st.booleans(), st.integers(0, 1000),
+       st.integers(0, 1000))
+def test_plan_signature_pure_in_sites_flags_instrumented(
+        sites, flags, instrumented, v1, v2):
+    """The signature (and its canonical fingerprint) is a pure function
+    of (sites, flags, instrumented): version and label never leak in —
+    that is what lets one compiled executable serve behaviorally
+    identical plans across control-plane versions."""
+    p1 = SpecializationPlan(version=v1, sites=sites, flags=dict(flags),
+                            instrumented=instrumented, label="x")
+    p2 = SpecializationPlan(version=v2, sites=sites, flags=dict(flags),
+                            instrumented=instrumented, label="y")
+    assert p1.signature == p2.signature
+    assert plan_fingerprint(p1) == plan_fingerprint(p2)
+    # ... and each component IS load-bearing
+    p3 = SpecializationPlan(version=v1, sites=sites, flags=dict(flags),
+                            instrumented=not instrumented)
+    assert plan_fingerprint(p3) != plan_fingerprint(p1)
+    flipped = dict(flags)
+    flipped["f1"] = not flipped.get("f1", False)
+    p4 = SpecializationPlan(version=v1, sites=sites, flags=flipped,
+                            instrumented=instrumented)
+    assert plan_fingerprint(p4) != plan_fingerprint(p1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(min_value=1e-6, max_value=1e3,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=300),
+       st.floats(min_value=0.0, max_value=1.0))
+def test_histogram_quantile_error_bound(xs, q):
+    """StreamingHistogram.quantile stays within the documented ~5%
+    relative-error bound of the true order statistic for any stream
+    inside [lo, hi) — including adversarial two-point extreme streams.
+
+    The reference MUST be the order statistic (``method="inverted_cdf"``
+    = sorted[ceil(q*n)-1]): numpy's default linear interpolation
+    invents values between observations, which a two-point stream like
+    [1e-6, 1e3] at q=0.5 places ~9 decades away from anything the
+    histogram (correctly) returns."""
+    h = StreamingHistogram()          # lo=1e-7, hi=1e4, 512 buckets
+    h.observe_all(xs)
+    got = h.quantile(q)
+    want = float(np.quantile(np.asarray(xs), q, method="inverted_cdf"))
+    assert got == pytest.approx(want, rel=0.06)
 
 
 @settings(max_examples=10, deadline=None)
