@@ -1,0 +1,234 @@
+"""Fault & recovery benchmark — the cost of surviving, in numbers.
+
+Measures the degraded-mode serving path the health PR added:
+
+  * ``resume``       fault -> first successful generic step on the SAME
+                     batch.  The generic executable is already resident
+                     in the active tuple, so resuming must involve ZERO
+                     compilation on the serving thread — the bench
+                     asserts no executable-cache inserts and no
+                     recompile cycles happen inside the resume window,
+                     and reports resume latency against the steady
+                     degraded step time (the ratio is the stall factor).
+  * ``degraded``     steady-state generic serving while degraded vs the
+                     healthy specialized step — the price of surviving
+                     on the deopt target.
+  * ``recover``      the blocking re-specialization cycle that swaps
+                     specialized code back in (t1 + t2, or a signature
+                     cache hit on repeat faults — later recoveries must
+                     be much cheaper than the first).
+  * ``compile_fault``  serving-thread step latency WHILE a failing
+                     recompile cycle retries under backoff on the
+                     scheduler pool — background compile failures must
+                     not stall dispatch.
+
+``json_record()`` feeds ``BENCH_fault.json`` (written by
+``benchmarks/run.py`` and the CI chaos job).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EngineConfig, MorpheusRuntime, SketchConfig, \
+    Table, TableSet
+from repro.distributed.fault import FailureInjector, SimulatedFailure
+
+from ._util import emit
+
+_LAST: dict = {}
+
+N_VALID = 48
+
+
+def _user_step(params, ctx, batch):
+    row = ctx.lookup("classes", batch["cls"], fields=("scale",))
+    x = batch["x"] * row["scale"][:, None]
+    old = ctx.lookup("sess", batch["slot"], fields=("count",))
+    ctx.update("sess", batch["slot"], {"count": old["count"] + 1})
+    return x
+
+
+def _tables():
+    return TableSet([
+        Table("classes",
+              {"scale": np.linspace(1.0, 2.0, N_VALID)
+               .astype(np.float32)},
+              n_valid=N_VALID, instrument=True),
+        Table("sess", {"count": np.zeros(32, np.int32)}, n_valid=32,
+              mutability="rw"),
+    ])
+
+
+def _batch(i=0):
+    rng = np.random.default_rng(i)
+    cls = np.arange(32) % N_VALID
+    cls[:24] = np.arange(24) % 3
+    return {"cls": jnp.asarray(cls, jnp.int32),
+            "x": jnp.asarray(rng.standard_normal((32, 16)),
+                             jnp.float32),
+            "slot": jnp.asarray(rng.integers(0, 32, 32), jnp.int32)}
+
+
+def _mk():
+    return MorpheusRuntime(
+        _user_step, _tables(), None, _batch(),
+        cfg=EngineConfig(sketch=SketchConfig(sample_every=2, max_hot=4,
+                                             hot_coverage=0.5)))
+
+
+def _median_step_us(rt, n, base=0):
+    ts = []
+    for i in range(n):
+        b = _batch(base + i)
+        t0 = time.perf_counter()
+        jax.block_until_ready(rt.step(b))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def run(tiny: bool = False) -> list:
+    cycles = 4 if tiny else 12
+    steady_n = 10 if tiny else 30
+    rt = _mk()
+    inj = FailureInjector()
+    rt.set_fault_injector(inj)
+    record: dict = {"config": {"tiny": tiny, "cycles": cycles}}
+    rows = []
+    try:
+        for i in range(8):
+            rt.step(_batch(i))
+        rt.recompile(block=True)
+        assert rt.plan.label.startswith("specialized")
+        healthy_us = _median_step_us(rt, steady_n, base=100)
+
+        cache = rt.controller.exec_cache
+        resume_ms, recover_ms, degraded_us_all = [], [], []
+        stall_inserts = stall_recompiles = 0
+        for c in range(cycles):
+            b = _batch(1000 + c)
+            inj.arm_next(SimulatedFailure("bench fault"))
+            try:
+                rt.step(b)
+            except SimulatedFailure:
+                pass
+            assert rt.degraded
+            ins0 = cache.stats.inserts
+            rc0 = rt.stats.recompiles
+            t0 = time.perf_counter()
+            jax.block_until_ready(rt.step(b))     # the resume step
+            resume_ms.append((time.perf_counter() - t0) * 1e3)
+            stall_inserts += cache.stats.inserts - ins0
+            stall_recompiles += rt.stats.recompiles - rc0
+            degraded_us_all.append(
+                _median_step_us(rt, steady_n, base=2000 + 100 * c))
+            t0 = time.perf_counter()
+            res = rt.recompile(block=True)
+            recover_ms.append((time.perf_counter() - t0) * 1e3)
+            assert res.get("recovered") is True and not rt.degraded
+
+        degraded_us = float(np.median(degraded_us_all))
+        resume = np.asarray(resume_ms)
+        record.update({
+            "healthy_specialized_us": healthy_us,
+            "degraded_generic_us": degraded_us,
+            "degraded_over_healthy": degraded_us / max(healthy_us,
+                                                       1e-9),
+            "resume_ms_p50": float(np.median(resume)),
+            "resume_ms_max": float(resume.max()),
+            # the acceptance metric: resuming after a fault is just one
+            # generic step — no executable-cache insert, no recompile
+            # cycle, ever, on the serving thread
+            "resume_cache_inserts": int(stall_inserts),
+            "resume_recompiles": int(stall_recompiles),
+            "resume_over_degraded_p50": float(
+                np.median(resume) * 1e3 / max(degraded_us, 1e-9)),
+            "recover_ms_first": recover_ms[0],
+            "recover_ms_rest_p50": float(np.median(recover_ms[1:]))
+            if len(recover_ms) > 1 else None,
+            "faults": rt.stats.faults,
+            "recoveries": rt.stats.recoveries,
+        })
+        if stall_inserts or stall_recompiles:
+            raise AssertionError(
+                f"fault resume compiled on the serving path: "
+                f"{stall_inserts} cache inserts, "
+                f"{stall_recompiles} recompiles")
+
+        # background compile-fault churn must not stall dispatch: arm
+        # one failing cycle (absorbed by the scheduler's backoff retry)
+        # and measure serving latency while it retries off-thread
+        rt.arm_compile_faults(1)
+        rt.controller.schedule(rt)
+        during = []
+        for i in range(steady_n):
+            b = _batch(5000 + i)
+            t0 = time.perf_counter()
+            jax.block_until_ready(rt.step(b))
+            during.append(time.perf_counter() - t0)
+        rt.controller.drain(timeout=120.0)
+        sch = rt.controller.scheduler.stats()
+        record.update({
+            "step_us_during_compile_fault_p50":
+                float(np.median(during) * 1e6),
+            "step_us_during_compile_fault_max":
+                float(np.max(during) * 1e6),
+            "compile_fault_retries": sch["retries"],
+            "compile_fault_gave_up": sch["gave_up"],
+        })
+        assert sch["retries"] >= 1 and sch["gave_up"] == 0
+
+        rows = [
+            ("fault/healthy_specialized", healthy_us,
+             f"degraded_ratio="
+             f"{record['degraded_over_healthy']:.2f}"),
+            ("fault/degraded_generic", degraded_us,
+             f"faults={record['faults']}"),
+            ("fault/resume", record["resume_ms_p50"] * 1e3,
+             f"max_ms={record['resume_ms_max']:.2f}"
+             f";cache_inserts={stall_inserts}"
+             f";recompiles={stall_recompiles}"),
+            ("fault/recover_first", record["recover_ms_first"] * 1e3,
+             f"rest_p50_ms={record['recover_ms_rest_p50']}"),
+            ("fault/step_during_compile_fault",
+             record["step_us_during_compile_fault_p50"],
+             f"max_us="
+             f"{record['step_us_during_compile_fault_max']:.0f}"
+             f";retries={record['compile_fault_retries']}"),
+        ]
+    finally:
+        rt.close()
+    global _LAST
+    _LAST = record
+    return rows
+
+
+def json_record() -> dict:
+    """The machine-readable result of the last :func:`run` call —
+    written to ``BENCH_fault.json`` by ``run.py`` and the CI chaos
+    job."""
+    return dict(_LAST)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke configuration (fewer fault cycles)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the machine-readable record here")
+    args = ap.parse_args(argv)
+    emit(run(tiny=args.tiny))
+    if args.json:
+        Path(args.json).write_text(json.dumps(json_record(), indent=2)
+                                   + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,6 +1,7 @@
 # Morpheus core: dynamic recompilation of JAX data planes.
 from .controller import ControllerConfig, ControllerStats, \
-    MorpheusController, PlaneSampling, RecompileScheduler, SamplingConfig
+    HealthConfig, MorpheusController, PlaneHealth, PlaneSampling, \
+    RecompileScheduler, SamplingConfig
 from .ctx import DataPlaneCtx
 from .engine import EngineConfig, MorpheusEngine
 from .execcache import CacheStats, ExecutableCache, \

@@ -45,6 +45,7 @@ from typing import Any, Dict, Optional
 
 from ..execcache import CacheStats, ExecutableCache
 from ..snapshot import TableSnapshotWorker
+from .health import HealthConfig, PlaneHealth
 from .sampling import PlaneSampling, SamplingConfig
 from .scheduler import RecompileScheduler
 
@@ -57,6 +58,7 @@ class ControllerConfig:
     workers: int = 2                   # recompile worker pool size
     exec_cache_capacity: int = 128     # shared LRU entries
     sampling: SamplingConfig = field(default_factory=SamplingConfig)
+    health: HealthConfig = field(default_factory=HealthConfig)
 
 
 @dataclass
@@ -67,17 +69,27 @@ class ControllerStats:
     dict; ``totals`` sums every integer counter across planes;
     ``sampling`` maps plane id -> the sampling state machine's snapshot
     (armed / duty_cycle / ...); ``scheduler`` and ``cache`` are the
-    worker pool's and the shared executable cache's counters."""
+    worker pool's and the shared executable cache's counters (the
+    scheduler dict carries per-plane ``last_errors`` — a plane whose
+    recompile cycles are failing is visible here, not silently
+    dropped); ``health`` maps plane id -> the health state machine's
+    snapshot (state / faults / recoveries / last_fault)."""
     planes: Dict[str, Dict[str, Any]]
     totals: Dict[str, int]
     sampling: Dict[str, Dict[str, Any]]
-    scheduler: Dict[str, int]
+    scheduler: Dict[str, Any]
     cache: CacheStats
+    health: Dict[str, Dict[str, Any]] = field(default_factory=dict)
 
     @property
     def cache_hit_rate(self) -> float:
         n = self.cache.hits + self.cache.misses
         return self.cache.hits / n if n else 0.0
+
+    def last_error(self, plane_id: str) -> Optional[str]:
+        """The plane's most recent recompile-cycle failure (None when
+        its last cycle succeeded)."""
+        return self.scheduler.get("last_errors", {}).get(plane_id)
 
 
 class MorpheusController:
@@ -103,11 +115,19 @@ class MorpheusController:
         self.exec_cache = (exec_cache if exec_cache is not None
                            else ExecutableCache(
                                self.cfg.exec_cache_capacity))
-        self.scheduler = RecompileScheduler(self.cfg.workers)
+        h = self.cfg.health
+        self.scheduler = RecompileScheduler(
+            self.cfg.workers,
+            backoff_base_s=h.backoff_base_s,
+            backoff_cap_s=h.backoff_cap_s,
+            max_retries=h.max_retries,
+            on_give_up=self._on_give_up,
+            clock=h.clock)
         self._lock = threading.Lock()
         self._planes: Dict[str, "weakref.ref"] = {}
         self._samplers: Dict[str, PlaneSampling] = {}
         self._workers: Dict[str, TableSnapshotWorker] = {}
+        self._health: Dict[str, PlaneHealth] = {}
         self._closed = False
 
     # ---- fleet membership -------------------------------------------------
@@ -126,6 +146,7 @@ class MorpheusController:
             self._planes[pid] = weakref.ref(runtime)
             self._samplers[pid] = PlaneSampling(runtime.engine.cfg.sketch,
                                                 self.cfg.sampling)
+            self._health[pid] = PlaneHealth(self.cfg.health, plane_id=pid)
             return pid
 
     def unregister(self, plane_id: str) -> None:
@@ -135,6 +156,7 @@ class MorpheusController:
         with self._lock:
             self._planes.pop(plane_id, None)
             self._samplers.pop(plane_id, None)
+            self._health.pop(plane_id, None)
             worker = self._workers.pop(plane_id, None)
         if worker is not None:
             worker.stop()
@@ -171,23 +193,88 @@ class MorpheusController:
 
     def notify_update(self, runtime) -> None:
         """A control-plane write landed on ``runtime``'s tables: re-arm
-        its sampling (the specialization basis moved) and kick its
-        snapshot worker so a fresh t1 snapshot is published off-thread.
-        Never raises — update paths must survive a closed controller."""
+        its sampling (the specialization basis moved), kick its snapshot
+        worker so a fresh t1 snapshot is published off-thread, and give
+        a QUARANTINED plane a fresh chance (new tables => possibly a
+        new, unpoisoned plan signature).  Never raises — update paths
+        must survive a closed controller."""
         with self._lock:
             sampler = self._samplers.get(runtime.plane_id)
             worker = self._workers.get(runtime.plane_id)
+            health = self._health.get(runtime.plane_id)
         if sampler is not None:
             sampler.rearm()
         if worker is not None:
             worker.request()
+        if health is not None:
+            health.on_update()
+
+    # ---- fleet health ------------------------------------------------------
+    def health_for(self, plane_id: str) -> PlaneHealth:
+        """The plane's health state machine (stable object)."""
+        with self._lock:
+            return self._health[plane_id]
+
+    def on_plane_fault(self, runtime, reason: str) -> None:
+        """The runtime's dispatch fault boundary degraded ``runtime`` to
+        generic-only dispatch.  Records the fault (with the step counter
+        as the recovery probe's baseline) so ``schedule`` starts gating
+        on the probe.  Never raises — this runs on the serving thread's
+        fault path."""
+        with self._lock:
+            health = self._health.get(runtime.plane_id)
+        if health is not None:
+            try:
+                steps = runtime.stats.steps
+            except Exception:
+                steps = None
+            health.on_fault(reason, steps=steps)
+
+    def on_plane_recovered(self, runtime) -> None:
+        """A re-specialization cycle swapped specialized code back into
+        a degraded ``runtime``: flip it (back) to HEALTHY with the
+        admission ramp armed.  Never raises."""
+        with self._lock:
+            health = self._health.get(runtime.plane_id)
+        if health is not None:
+            health.on_recovered()
+
+    def _on_give_up(self, plane_id: str, exc: BaseException) -> None:
+        """Scheduler give-up hook: ``plane_id``'s cycle kept failing
+        through the bounded backoff retries.  Quarantine the plan
+        signature in the shared cache (never re-attempted — every plane
+        falls through to generic for it) and the plane's health."""
+        with self._lock:
+            ref = self._planes.get(plane_id)
+            health = self._health.get(plane_id)
+        runtime = ref() if ref is not None else None
+        sig = getattr(runtime, "_last_plan_signature", None)
+        if sig is not None:
+            self.exec_cache.quarantine(sig)
+        if health is not None:
+            health.quarantine(repr(exc))
 
     # ---- recompilation ----------------------------------------------------
     def schedule(self, runtime) -> bool:
         """Queue one recompile cycle for ``runtime`` on the shared worker
-        pool (coalesced if already pending).  Non-blocking."""
+        pool (coalesced if already pending).  Non-blocking.  Health-
+        gated: a DEGRADED plane is queued only once its recovery probe
+        passes (``min_downtime_s`` elapsed and ``probe_steps`` served
+        since the fault — passing flips it to RECOVERING); a QUARANTINED
+        plane is never queued (its signature is poisoned until a control
+        update moves the basis).  Returns False when the gate held the
+        plane back."""
         if self._closed:
             raise RuntimeError("controller closed")
+        with self._lock:
+            health = self._health.get(runtime.plane_id)
+        if health is not None:
+            try:
+                steps = runtime.stats.steps
+            except Exception:
+                steps = None
+            if not health.gate_schedule(steps):
+                return False
         return self.scheduler.submit(runtime.plane_id, runtime)
 
     def schedule_all(self) -> int:
@@ -204,12 +291,16 @@ class MorpheusController:
     def stats(self) -> ControllerStats:
         planes: Dict[str, Dict[str, Any]] = {}
         sampling: Dict[str, Dict[str, Any]] = {}
+        health: Dict[str, Dict[str, Any]] = {}
         for pid, rt in self.planes().items():
             planes[pid] = rt.stats.snapshot()
             with self._lock:
                 sampler = self._samplers.get(pid)
+                hm = self._health.get(pid)
             if sampler is not None:
                 sampling[pid] = sampler.state()
+            if hm is not None:
+                health[pid] = hm.snapshot()
         totals: Dict[str, int] = {}
         for snap in planes.values():
             for k, v in snap.items():
@@ -222,7 +313,8 @@ class MorpheusController:
                                # a point-in-time copy like every other
                                # field, not the live mutating object
                                cache=dataclasses.replace(
-                                   self.exec_cache.stats))
+                                   self.exec_cache.stats),
+                               health=health)
 
     def close(self) -> None:
         """Tear the fleet's control loop down: stop the recompile pool

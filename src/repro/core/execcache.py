@@ -60,6 +60,7 @@ class CacheStats:
     evictions: int = 0
     inserts: int = 0
     inflight_waits: int = 0
+    quarantined: int = 0     # poisoned plan signatures (never recompiled)
 
 
 def batch_key(batch) -> Hashable:
@@ -91,6 +92,7 @@ class ExecutableCache:
         self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
         self._inflight: dict = {}       # key -> Event of the compiling
                                         # owner (get_or_compile)
+        self._quarantined: set = set()  # poisoned plan signatures
 
     @staticmethod
     def make_key(ns: Hashable, signature: Hashable, bkey: Hashable,
@@ -192,6 +194,41 @@ class ExecutableCache:
                         self._inflight.pop(key, None)
                     ev.set()
             ev.wait()
+
+    # ---- quarantine (fleet health) -----------------------------------
+    def quarantine(self, signature: Hashable) -> None:
+        """Mark a plan *signature* poisoned: the recompile scheduler
+        exhausted its bounded retries on a plane whose cycle kept
+        failing for this signature.  Recompile cycles consult
+        :meth:`is_quarantined` and skip compilation (the plane falls
+        through to generic dispatch); every cached executable built
+        from the signature is purged so a shared-cache fleet cannot
+        keep serving the poisoned code.  Idempotent."""
+        with self._lock:
+            if signature in self._quarantined:
+                return
+            self._quarantined.add(signature)
+            self.stats.quarantined += 1
+            # key anatomy (make_key): key[1] is (plan signature-or-key,
+            # instr_struct) — purge every entry compiled from the
+            # poisoned signature
+            dead = [k for k in self._entries
+                    if isinstance(k, tuple) and len(k) >= 2
+                    and isinstance(k[1], tuple) and len(k[1]) >= 1
+                    and k[1][0] == signature]
+            for k in dead:
+                del self._entries[k]
+                self.stats.evictions += 1
+
+    def unquarantine(self, signature: Hashable) -> None:
+        with self._lock:
+            if signature in self._quarantined:
+                self._quarantined.discard(signature)
+                self.stats.quarantined -= 1
+
+    def is_quarantined(self, signature: Hashable) -> bool:
+        with self._lock:
+            return signature in self._quarantined
 
     def clear(self) -> None:
         with self._lock:

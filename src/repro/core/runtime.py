@@ -196,6 +196,13 @@ StreamingHistogram` series in ``hists`` — so p50/p99 everywhere in the
                                   # must make at most ONE per step or
                                   # fused window (regression-checked by
                                   # benchmarks/bench_dispatch.py)
+    # ---- fleet health (repro.core.controller.health) ----
+    faults: int = 0               # dispatch-layer faults survived
+    degraded_steps: int = 0       # steps served generic-only (degraded)
+    recoveries: int = 0           # degraded -> specialized swaps
+    straggler_events: int = 0     # StragglerMonitor mitigations fired
+    requests_rejected_degraded: int = 0   # admissions shed PLANE_DEGRADED
+    requests_failed: int = 0      # in-flight requests lost to a fault
     t1_history: List[float] = field(default_factory=list)
     t2_history: List[float] = field(default_factory=list)
     swap_history: List[float] = field(default_factory=list)
@@ -410,6 +417,20 @@ class MorpheusRuntime:
         self._closed = False
         self._merge_fn: Optional[Callable] = None
         self._batch_sh_cache: Dict[Any, Any] = {}
+        # ---- fleet health (dispatch fault boundary) ----
+        # `_degraded` flips only under _write() (so every claim's gen
+        # validation observes it); while set, dispatch is generic-only
+        # regardless of the guard — the fault that set it proved the
+        # specialized/instrumented executables unsafe.  `_fault_injector`
+        # is the chaos hook (distributed/fault.py FailureInjector): its
+        # check runs INSIDE the step's try-block BEFORE the executable,
+        # so an injected fault aborts the claim with the state tuple
+        # untouched (not donated) and the same batch can be retried.
+        self._degraded = False
+        self._degrade_reason: Optional[str] = None
+        self._fault_injector: Optional[Any] = None
+        self._compile_faults = 0      # armed recompile-cycle failures
+        self._last_plan_signature: Optional[Any] = None
         self.last_snapshot: Optional[VersionedSnapshot] = None
         self._steps_at_cycle = 0
         # the sketch snapshot retained from the last ARMED cycle: while
@@ -812,8 +833,13 @@ class MorpheusRuntime:
         deltas = {"steps": 1}
         if cnt:
             deltas["batch_transfers"] = cnt["transfers"]
-        # program-level guard: ONE host compare covers every RO table
-        if self.tables.version != plan.version:
+        # degraded-mode check first, then the program-level guard (ONE
+        # host compare covering every RO table): a faulted plane serves
+        # generic-only until a re-specialization cycle clears the flag
+        if self._degraded:
+            exec_ = generic_exec
+            deltas["degraded_steps"] = 1
+        elif self.tables.version != plan.version:
             exec_ = generic_exec
             deltas["deopt_steps"] = 1
         elif self.enable and self.sampler.should_sample(self._step_seq):
@@ -823,9 +849,17 @@ class MorpheusRuntime:
         else:
             exec_ = spec_exec
         try:
+            # the chaos hook fires BEFORE the executable runs: the state
+            # tuple is not donated yet, so the abort below leaves the
+            # plane's state intact and the same batch can be retried
+            # through the degraded (generic) path — byte-identically
+            if self._fault_injector is not None:
+                self._fault_injector.check(self._step_seq)
             out, new_state = exec_(self.params, state, batch)
-        except BaseException:
+        except BaseException as e:
             self._abort_step()
+            if isinstance(e, Exception):
+                self._on_step_fault(e)
             raise
         self._commit_step(gen, new_state, sampled, deltas)
         return out
@@ -901,7 +935,13 @@ class MorpheusRuntime:
             if cnt:
                 deltas["batch_transfers"] = cnt["transfers"]
             sampled = False
-            if self.tables.version != plan.version:
+            if self._degraded:
+                # safe to read lock-free here: the flag only flips under
+                # _write(), which bumps the generation — a stale read is
+                # caught by the claim validation below and retried
+                role_plan = self.generic_plan
+                deltas["degraded_steps"] = k
+            elif self.tables.version != plan.version:
                 role_plan = self.generic_plan
                 deltas["deopt_steps"] = k
             elif (self.enable and self.sampler.should_sample_window(
@@ -923,9 +963,15 @@ class MorpheusRuntime:
         # for)
         self._fused_memo[mkey] = fexec
         try:
+            # same fault-boundary contract as step(): the chaos hook
+            # fires before the executable, so the abort is state-safe
+            if self._fault_injector is not None:
+                self._fault_injector.check(self._step_seq)
             out, new_state = fexec(self.params, state, stacked)
-        except BaseException:
+        except BaseException as e:
             self._abort_step()
+            if isinstance(e, Exception):
+                self._on_step_fault(e)
             raise
         self._commit_step(gen, new_state, sampled, deltas)
         return out
@@ -1174,6 +1220,118 @@ class MorpheusRuntime:
         self.tables.bump_version(f"flag:{name}")   # control-plane state
         self.controller.notify_update(self)
 
+    # ---- fleet health: the dispatch fault boundary ---------------------
+    @property
+    def degraded(self) -> bool:
+        """True while this plane serves generic-only after a fault."""
+        return self._degraded
+
+    @property
+    def degrade_reason(self) -> Optional[str]:
+        return self._degrade_reason
+
+    def set_fault_injector(self, injector) -> None:
+        """Attach a chaos hook (:class:`~repro.distributed.fault.\
+FailureInjector`): its ``check(step)`` runs inside every step/window's
+        try-block BEFORE the executable, so an injected fault exercises
+        the real abort/degrade/recover machinery with the state tuple
+        untouched.  Pass ``None`` to detach."""
+        self._fault_injector = injector
+
+    def arm_compile_faults(self, n: int = 1) -> None:
+        """Make the next ``n`` recompile cycles raise a
+        :class:`~repro.distributed.fault.SimulatedCompileFailure` right
+        after planning — exercising the scheduler's backoff-retry and
+        (past ``max_retries``) the signature-quarantine path."""
+        self._compile_faults += n
+
+    def degrade_to_generic(self, reason: str) -> None:
+        """Swap this plane to generic-only dispatch (the Morpheus deopt
+        target doubles as the fault-survival mode): every subsequent
+        step/window routes to the generic executable regardless of the
+        program guard, until a re-specialization cycle swaps specialized
+        code back in and clears the flag.  The flip happens under the
+        write side of the seqlock, so in-flight dispatch work prepared
+        against the healthy world fails its claim validation and
+        retries into the degraded path."""
+        with self._write():
+            self._degraded = True
+            self._degrade_reason = str(reason)
+        self.stats.bump(faults=1)
+        try:
+            self.controller.on_plane_fault(self, reason)
+        except Exception:
+            pass        # the fault path must survive a closed controller
+
+    def simulate_device_loss(self, reason: str = "device-loss") -> None:
+        """Fault path for a lost device: shrink the plane to
+        single-device serving.  The LIVE state (including RW tables —
+        sessions, SSM state — whose truth is on device, not in the host
+        ``TableSet``) is pulled to host byte-exactly, the mesh dropped,
+        the executable-cache namespace rotated (cache keys do not carry
+        the mesh — old-placement executables must never be served for
+        the shrunken plane), a generic executable compiled for the new
+        placement, and the plane degraded — all under one write-side
+        quiesce, serialized against recompile cycles so a concurrent
+        swap cannot re-install old-mesh code.  On a real pod the same
+        sequence runs through checkpoint-based
+        :func:`~repro.distributed.fault.elastic_reshard`; in-process the
+        host round-trip IS the resharding ``device_put``."""
+        if self.mesh is None:
+            # single-device already: nothing to shrink, plain degrade
+            self.degrade_to_generic(reason)
+            return
+        with self._recompile_mutex:     # no cycle swaps mid-handoff
+            with self._write():
+                # byte-exact live-state handoff (np.asarray gathers the
+                # addressable shards of each replicated/sharded array)
+                self.state = jax.tree.map(np.asarray, self.state)
+                self.params = jax.tree.map(np.asarray, self.params)
+                self._example_batch = jax.tree.map(
+                    np.asarray, self._example_batch)
+                self.mesh = None
+                self._cache_ns = f"{self._cache_ns}@shrunk"
+                self._batch_sh_cache = {}
+                self._merge_fn = None
+                isites = tuple(sorted(self.state.instr.keys()))
+                # compile the new placement's generic pair inline: the
+                # plane has nothing safe to serve until it lands, so the
+                # stall is the fault's cost, not a serving regression
+                execs = self._compile_into_cache(
+                    [(self.generic_plan, self.engine.cfg.donate),
+                     (self._instr_twin(self.generic_plan, isites),
+                      self.engine.cfg.donate)],
+                    self._example_batch, state=self.state,
+                    instr_struct=isites, serving=False)
+                gen_exec = execs[0]
+                self.generic_instr_exec = execs[1]
+                self._active = (self.generic_plan, gen_exec,
+                                execs[1], gen_exec)
+                self._active_isites = isites
+                self._degraded = True
+                self._degrade_reason = str(reason)
+        self.stats.bump(faults=1)
+        try:
+            self.controller.on_plane_fault(self, reason)
+        except Exception:
+            pass
+
+    def _on_step_fault(self, exc: Exception) -> None:
+        """A step/window raised: route the plane into degraded mode.
+        Runs AFTER ``_abort_step`` released the slot (so the degrade's
+        write-side quiesce cannot deadlock on our own claim) and must
+        never mask the original exception."""
+        if self._closed:
+            return
+        try:
+            from ..distributed.fault import SimulatedDeviceLoss
+            if isinstance(exc, SimulatedDeviceLoss):
+                self.simulate_device_loss(f"device-loss: {exc!r}")
+            else:
+                self.degrade_to_generic(f"step-fault: {exc!r}")
+        except Exception:
+            pass
+
     # ---- recompilation ---------------------------------------------------
     def recompile(self, block: bool = True) -> Optional[dict]:
         """Run one Morpheus compilation cycle (§4.4).  ``block=False``
@@ -1302,6 +1460,29 @@ class MorpheusRuntime:
                 profile=profile)
             self.stats.log("t1_history", t1)
             self.stats.pass_stats = pass_stats
+            # recorded BEFORE any failure below: the scheduler's give-up
+            # hook quarantines exactly the signature whose cycle died
+            self._last_plan_signature = plan.signature
+            if self._compile_faults > 0:      # chaos: injected t2 failure
+                self._compile_faults -= 1
+                from ..distributed.fault import SimulatedCompileFailure
+                raise SimulatedCompileFailure(
+                    "injected recompile failure")
+            if self.exec_cache.is_quarantined(plan.signature):
+                # poisoned signature (this plane's give-up, or another
+                # plane's on a shared cache): never re-attempted — keep
+                # serving generic; a degraded plane drops back to
+                # DEGRADED (the schedule gate had flipped it RECOVERING)
+                if self._degraded:
+                    try:
+                        self.controller.on_plane_fault(
+                            self, "quarantined plan signature")
+                    except Exception:
+                        pass
+                self._steps_at_cycle = self.stats.steps
+                return {"t1": t1, "pass_stats": pass_stats,
+                        "plan": plan.label, "n_sites": len(plan.sites),
+                        "quarantined": True}
 
             # plan churn drives this plane's sampling duty cycle; after
             # enough stable cycles the sampler disarms and isites
@@ -1327,6 +1508,7 @@ class MorpheusRuntime:
                 # tracking.
                 fresh_instr, fresh_guards = \
                     self._fresh_instr_guards(isites)
+                recovered = False
                 with self._write():
                     self._active = (
                         dataclasses.replace(active_plan,
@@ -1335,12 +1517,21 @@ class MorpheusRuntime:
                     self.state = self.state.replace(
                         instr=fresh_instr, guards=fresh_guards)
                     self._backbuf.publish(fresh_instr)
-                self.stats.bump(revalidations=1, recompiles=1)
+                    if self._degraded:      # the code is fresh-validated
+                        self._degraded = False    # against the current
+                        self._degrade_reason = None   # basis: recovered
+                        recovered = True
+                deltas = {"revalidations": 1, "recompiles": 1}
+                if recovered:
+                    deltas["recoveries"] = 1
+                self.stats.bump(**deltas)
+                if recovered:
+                    self.controller.on_plane_recovered(self)
                 self._steps_at_cycle = self.stats.steps
                 return {"t1": t1, "pass_stats": pass_stats,
                         "plan": self.plan.label,
                         "n_sites": len(plan.sites),
-                        "revalidated": True}
+                        "revalidated": True, "recovered": recovered}
 
             wanted = [plan, self._instr_twin(plan, isites)]
             if isites != self._active_isites:
@@ -1383,6 +1574,7 @@ class MorpheusRuntime:
             fresh_instr, fresh_guards = self._fresh_instr_guards(isites)
             self._backbuf.publish(fresh_instr)
             t0 = time.time()
+            recovered = False
             with self._write():
                 # ATOMIC swap (the BPF_PROG_ARRAY pointer update): one
                 # reference assignment replaces the whole tuple — after
@@ -1400,12 +1592,21 @@ class MorpheusRuntime:
                 # re-publish under the lock: a sampled step may have
                 # published pre-swap sketches since the warm above
                 self._backbuf.publish(fresh_instr)
+                if self._degraded:      # specialized code is back: the
+                    self._degraded = False      # plane has re-specialized
+                    self._degrade_reason = None
+                    recovered = True
             self.stats.log("swap_history", time.time() - t0)
-            self.stats.bump(recompiles=1, swaps=1)
+            deltas = {"recompiles": 1, "swaps": 1}
+            if recovered:
+                deltas["recoveries"] = 1
+            self.stats.bump(**deltas)
+            if recovered:
+                self.controller.on_plane_recovered(self)
             self._steps_at_cycle = self.stats.steps
             return {"t1": t1, "pass_stats": pass_stats,
                     "plan": plan.label, "n_sites": len(plan.sites),
-                    "revalidated": False}
+                    "revalidated": False, "recovered": recovered}
         finally:
             # drain queued control updates (§4.4 replay) BEFORE clearing
             # _compiling, in FIFO order: updates arriving during the

@@ -31,6 +31,16 @@ class SimulatedFailure(RuntimeError):
     pass
 
 
+class SimulatedDeviceLoss(SimulatedFailure):
+    """A device dropped out mid-step: the plane must shrink its mesh
+    and hand live state over (``MorpheusRuntime.simulate_device_loss``)."""
+
+
+class SimulatedCompileFailure(SimulatedFailure):
+    """XLA 'failed' to compile: injected into a recompile cycle to
+    exercise the scheduler's backoff-retry / quarantine path."""
+
+
 @dataclass
 class FailureInjector:
     fail_at_step: Optional[int] = None
@@ -39,8 +49,19 @@ class FailureInjector:
 
     def __post_init__(self):
         self._rng = np.random.default_rng(self.seed)
+        self._armed: list = []      # one-shot queued faults (arm_next)
+
+    def arm_next(self, exc: Optional[BaseException] = None) -> None:
+        """Queue a one-shot fault: the NEXT ``check`` call raises
+        ``exc`` (default: a plain :class:`SimulatedFailure`).  Used by
+        the chaos harness to fire a specific fault type at a specific
+        schedule event regardless of step numbering."""
+        self._armed.append(exc if exc is not None
+                           else SimulatedFailure("armed failure"))
 
     def check(self, step: int) -> None:
+        if self._armed:
+            raise self._armed.pop(0)
         if self.fail_at_step is not None and step == self.fail_at_step:
             raise SimulatedFailure(f"injected failure at step {step}")
         if self.fail_prob and self._rng.random() < self.fail_prob:

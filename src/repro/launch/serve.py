@@ -72,20 +72,25 @@ def _skewed_params(cfg: ServeConfig, key, skew_router: bool):
     return params
 
 
-def _make_drain(pending, lat):
+def _make_drain(pending, lat, on_latency=None):
     """The bounded-in-flight drain shared by both serve loops: block on
     the oldest dispatched units until at most ``limit`` remain,
-    recording each unit's dispatch->ready latency."""
+    recording each unit's dispatch->ready latency.  ``on_latency``
+    (optional) observes each unit's wall seconds as it retires — the
+    straggler monitor's tap."""
     def drain(limit: int) -> None:
         while len(pending) > limit:
             t0, out = pending.popleft()
             jax.block_until_ready(out)
-            lat.append(time.time() - t0)
+            dt = time.time() - t0
+            lat.append(dt)
+            if on_latency is not None:
+                on_latency(dt)
     return drain
 
 
 def _drive_pipelined(step_one, make_batch, place, steps, fuse, inflight,
-                     on_boundary=None):
+                     on_boundary=None, on_latency=None):
     """The single-plane bounded-in-flight pipelined serve loop (the
     fleet driver interleaves its planes through the same
     pending/:func:`_make_drain` pattern inline): dispatch up to
@@ -107,7 +112,7 @@ def _drive_pipelined(step_one, make_batch, place, steps, fuse, inflight,
     from collections import deque
     pending: deque = deque()
     lat = []
-    drain = _make_drain(pending, lat)
+    drain = _make_drain(pending, lat, on_latency)
 
     def prep(i0):
         return place([make_batch(i0 + j) for j in range(fuse)])
@@ -195,8 +200,23 @@ def run_serve(steps=200, locality="high", morpheus=True,
                   f"t1={info['t1']*1e3:.0f}ms sites={info['n_sites']} "
                   f"hot_experts={rt.hot_experts()}", flush=True)
 
+    # straggler mitigation tap: every retired unit's wall time feeds the
+    # monitor; a unit slower than threshold x the rolling median (after
+    # `patience` suspects) fires a mitigation event into RuntimeStats —
+    # on a real pod the callback would also demote the host / shrink the
+    # mesh (runtime.simulate_device_loss is the in-process analogue)
+    from ..distributed.fault import StragglerMonitor
+    straggler = StragglerMonitor(
+        on_straggler=lambda s, sec: rt.stats.bump(straggler_events=1))
+    observed = {"n": 0}
+
+    def on_latency(seconds):
+        observed["n"] += 1
+        straggler.observe(observed["n"], seconds)
+
     wall, lat, served = _drive_pipelined(
-        step_one, make_batch, place, steps, fuse, inflight, on_boundary)
+        step_one, make_batch, place, steps, fuse, inflight, on_boundary,
+        on_latency)
     # net serving time: recompile boundaries are not serving work.
     # Batch generation is NOT subtracted here — _drive_pipelined preps
     # the next unit between dispatch and drain, so that host time
@@ -219,6 +239,7 @@ def run_serve(steps=200, locality="high", morpheus=True,
         "wall_s": wall,
         "runtime": rt.stats,
         "hot_experts": rt.hot_experts(),
+        "straggler_events": rt.stats.straggler_events,
     }
     if not quiet:
         print(f"[serve] locality={locality} morpheus={morpheus} "

@@ -55,14 +55,21 @@ class OpenLoopDriver:
 
     ``payloads[i]`` is submitted after sleeping ``gaps[i]``, to
     ``frontends[i % len(frontends)]`` (round-robin load balancing),
-    with a relative deadline of ``deadline_s`` when given.  Run inline
+    with a relative deadline of ``deadline_s`` when given.  When the
+    round-robin target's plane is degraded/quarantined
+    (``ServingFrontend.plane_healthy``) the driver reroutes to the next
+    healthy frontend in ring order — the fleet-level half of degraded-
+    mode serving; with every plane sick, the original target takes the
+    submission and sheds it with its explicit ``PLANE_DEGRADED``
+    rejection (the loss stays accounted, never silent).  Run inline
     (:meth:`run`) or on a thread (:meth:`start` / :meth:`join`); the
     submitted :class:`Request` objects land in ``self.requests``."""
 
     def __init__(self, frontends: Sequence, payloads: Sequence,
                  gaps: Sequence[float],
                  deadline_s: Optional[float] = None,
-                 sleep: Callable[[float], None] = time.sleep):
+                 sleep: Callable[[float], None] = time.sleep,
+                 reroute: bool = True):
         if len(payloads) != len(gaps):
             raise ValueError("need one gap per payload")
         self.frontends = list(frontends)
@@ -70,16 +77,34 @@ class OpenLoopDriver:
         self.gaps = list(gaps)
         self.deadline_s = deadline_s
         self.sleep = sleep
+        self.reroute = reroute
+        self.rerouted = 0
         self.requests: List = []
         self._thread: Optional[threading.Thread] = None
 
-    def run(self) -> List:
+    def _pick(self, i: int):
         nf = len(self.frontends)
+        fe = self.frontends[i % nf]
+        if not self.reroute or nf == 1:
+            return fe
+        try:
+            if fe.plane_healthy:
+                return fe
+            for off in range(1, nf):
+                alt = self.frontends[(i + off) % nf]
+                if alt.plane_healthy:
+                    self.rerouted += 1
+                    return alt
+        except AttributeError:
+            pass            # bare stubs without the health predicate
+        return fe
+
+    def run(self) -> List:
         for i, (payload, gap) in enumerate(zip(self.payloads,
                                                self.gaps)):
             if gap > 0:
                 self.sleep(float(gap))
-            fe = self.frontends[i % nf]
+            fe = self._pick(i)
             self.requests.append(
                 fe.submit(payload, deadline_s=self.deadline_s))
         return self.requests

@@ -113,8 +113,27 @@ class DynamicBatcher:
         for r in shed:
             r.finish("shed", timing={
                 "queue_wait_s": now - r.arrival_ts,
-                "total_s": now - r.arrival_ts})
+                "total_s": now - r.arrival_ts},
+                reason="DEADLINE_EXPIRED")
         self.rt.stats.bump(requests_shed=len(shed))
+
+    def _fail_window(self, chunks: List[List], exc: BaseException
+                     ) -> None:
+        """A dispatch raised mid-window: the requests' batch is gone
+        (the fault boundary aborted the step before any state was
+        donated), so every request in the window terminates "failed"
+        with an accounted reason — no request is silently lost, and the
+        batcher thread survives to serve the degraded plane."""
+        now = self.clock()
+        n = 0
+        for chunk in chunks:
+            for r in chunk:
+                r.finish("failed", timing={
+                    "queue_wait_s": (r._taken_ts or now) - r.arrival_ts,
+                    "total_s": now - r.arrival_ts},
+                    reason="PLANE_FAULT")
+                n += 1
+        self.rt.stats.bump(requests_failed=n)
 
     # ---- dispatch -----------------------------------------------------
     def _dispatch(self, rows: List, buckets: Tuple[int, ...]) -> None:
@@ -145,7 +164,15 @@ class DynamicBatcher:
                for chunk in chunks]
         placed = self.rt.place_batch(raw, fused=True)
         t_disp = self.clock()
-        out = self.rt.step_many(placed, k=len(chunks))
+        try:
+            out = self.rt.step_many(placed, k=len(chunks))
+        except Exception as e:
+            # the runtime's fault boundary already aborted the step and
+            # degraded the plane; account for the window's requests and
+            # keep serving — the next window routes through the generic
+            # executable
+            self._fail_window(chunks, e)
+            return
         self._inflight.append((out, chunks, t_disp, bucket,
                                mispredicts))
         # bounded pipelining: keep at most cfg.inflight windows

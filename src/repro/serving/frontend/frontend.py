@@ -81,10 +81,12 @@ class Request:
     """One in-flight request.  ``payload`` is the per-request row dict
     the data plane consumes; ``deadline`` is absolute (same clock as the
     frontend's).  Terminal state lands in ``status`` ("ok", "rejected",
-    "shed"), ``output`` (the per-request slice of the batch output),
-    ``timing`` (queue_wait_s / batch_wait_s / execute_s / total_s) and
-    ``slo_met`` (None for deadline-less requests); :meth:`wait` blocks
-    until then."""
+    "shed", "failed"), ``output`` (the per-request slice of the batch
+    output), ``timing`` (queue_wait_s / batch_wait_s / execute_s /
+    total_s), ``slo_met`` (None for deadline-less requests) and
+    ``reason`` (the machine-readable *why* of a non-"ok" terminal state
+    — ``QUEUE_FULL``, ``PLANE_DEGRADED``, ``DEADLINE_EXPIRED``,
+    ``PLANE_FAULT``); :meth:`wait` blocks until then."""
     id: int
     payload: Any
     arrival_ts: float
@@ -93,18 +95,22 @@ class Request:
     output: Any = None
     timing: Dict[str, float] = field(default_factory=dict)
     slo_met: Optional[bool] = None
+    reason: Optional[str] = None
     _done: threading.Event = field(default_factory=threading.Event,
                                    repr=False)
     _taken_ts: Optional[float] = field(default=None, repr=False)
 
     def finish(self, status: str, output: Any = None,
                timing: Optional[Dict[str, float]] = None,
-               slo_met: Optional[bool] = None) -> None:
+               slo_met: Optional[bool] = None,
+               reason: Optional[str] = None) -> None:
         self.status = status
         self.output = output
         if timing:
             self.timing = timing
         self.slo_met = slo_met
+        if reason is not None:
+            self.reason = reason
         self._done.set()
 
     @property
@@ -206,6 +212,28 @@ class ServingFrontend:
         self._ids = itertools.count()
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
+        # the plane's health state machine, resolved lazily: stub
+        # runtimes (tests) and explicit exec_cache-only setups have no
+        # controller-registered health — the gate then admits everything
+        self._plane_health: Any = None
+
+    # ---- fleet health ------------------------------------------------
+    def _health(self):
+        if self._plane_health is None:
+            try:
+                self._plane_health = self.rt.controller.health_for(
+                    self.rt.plane_id)
+            except Exception:
+                self._plane_health = False      # resolved: none
+        return self._plane_health or None
+
+    @property
+    def plane_healthy(self) -> bool:
+        """True when this frontend's plane currently admits new
+        requests — the fleet driver's reroute predicate.  A RECOVERING
+        plane reads healthy (it admits, token-bucket ramped)."""
+        h = self._health()
+        return h is None or h.state not in ("degraded", "quarantined")
 
     # ---- the submit path ---------------------------------------------
     def submit(self, payload, deadline: Optional[float] = None,
@@ -214,7 +242,8 @@ class ServingFrontend:
         clock); ``deadline_s`` is relative to now; with neither,
         ``cfg.default_slo_s`` applies (or no deadline at all).  Always
         returns the Request — check ``status`` for an immediate
-        rejection (queue full)."""
+        rejection (``reason``: ``PLANE_DEGRADED`` while the plane is
+        faulted/ramping, ``QUEUE_FULL`` at capacity)."""
         now = self.clock()
         if deadline is None:
             rel = (deadline_s if deadline_s is not None
@@ -222,10 +251,19 @@ class ServingFrontend:
             deadline = now + rel if rel is not None else None
         req = Request(next(self._ids), payload, now, deadline)
         self.profile.record_arrival(now)
-        if self.queue.submit(req):
+        health = self._health()
+        if health is not None and not health.admit():
+            # shed at the door: a degraded plane serves only what is
+            # already in flight; a recovering one re-admits through the
+            # token-bucket ramp — either way the caller learns *why*
+            req.finish("rejected", reason="PLANE_DEGRADED")
+            self.rt.stats.bump(requests_submitted=1,
+                               requests_rejected=1,
+                               requests_rejected_degraded=1)
+        elif self.queue.submit(req):
             self.rt.stats.bump(requests_submitted=1)
         else:
-            req.finish("rejected")
+            req.finish("rejected", reason="QUEUE_FULL")
             self.rt.stats.bump(requests_submitted=1,
                                requests_rejected=1)
         return req
@@ -285,6 +323,6 @@ class ServingFrontend:
         ready, shed = self.queue.take(self.cfg.capacity, self.clock())
         leftovers = ready + shed
         for r in leftovers:
-            r.finish("shed")
+            r.finish("shed", reason="FRONTEND_STOPPED")
         if leftovers:
             self.rt.stats.bump(requests_shed=len(leftovers))

@@ -23,6 +23,13 @@ checkable across the whole config zoo:
     batch/update sequence, asserting outputs and RW table state equal
     at every step and that every injected mispredict deopts through
     the program guard;
+  * :mod:`~repro.testing.chaos` extends the differential harness with
+    fault injection: step faults, device loss, compile failures and
+    straggler stalls fire mid-schedule on the specialized side only —
+    the plane must degrade to generic-only dispatch, keep serving
+    byte-identically against the never-faulted oracle, account every
+    request, and recover to specialized dispatch through the
+    health-gated controller;
   * :mod:`~repro.testing.fingerprint` canonically hashes plan
     signatures (sha256 over a canonical serialization — never Python
     ``hash()``, which is per-process salted) and exposes a CLI so plan
@@ -33,12 +40,14 @@ checkable across the whole config zoo:
 speedup and plan determinism to ``BENCH_archzoo.json``.
 """
 from .archzoo import ArchPlane, build_plane, conformance_engine_config
+from .chaos import CHAOS_MODES, FAULT_KINDS, run_chaos
 from .churn import ChurnEvent, generate_schedule, register_churn_move
 from .conformance import ConformanceError, run_conformance
 from .fingerprint import plan_fingerprint, run_fingerprints
 
 __all__ = [
     "ArchPlane", "build_plane", "conformance_engine_config",
+    "CHAOS_MODES", "FAULT_KINDS", "run_chaos",
     "ChurnEvent", "generate_schedule", "register_churn_move",
     "ConformanceError", "run_conformance",
     "plan_fingerprint", "run_fingerprints",

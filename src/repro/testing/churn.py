@@ -54,6 +54,14 @@ class ChurnEvent:
     recompile         blocking recompile cycle on both runtimes
     inject_mispredict ``tables.bump_version()`` on both — the next step
                       MUST deopt through the program guard
+    chaos_fault       (chaos schedules only) arm a fault on the SPEC
+                      side: ``payload["fault"]`` is "step" /
+                      "device_loss" / "compile" / "straggler" — the
+                      oracle never faults; the spec plane must degrade,
+                      keep serving byte-identically, and recover
+    schedule_recovery (chaos schedules only) drive the controller's
+                      health-gated schedule + drain until the spec
+                      plane re-specializes (or is provably quarantined)
     """
     kind: str
     payload: Dict = field(default_factory=dict)
@@ -72,20 +80,30 @@ _MOVES: Dict[str, Dict] = {}
 
 def register_churn_move(name: str, factory: MoveFactory,
                         applies: Optional[Callable[[ArchPlane], bool]]
-                        = None, weight: float = 1.0) -> None:
+                        = None, weight: float = 1.0,
+                        chaos: bool = False) -> None:
     """Add (or replace) a churn move.  ``factory(plane, rng, traffic)``
-    returns the materialized event (it may also mutate ``traffic`` —
-    that's how hot-set rotation works); ``applies(plane)`` gates the
-    move per architecture; ``weight`` biases random selection."""
+    returns the materialized event — or a LIST of events (an *episode*:
+    the chaos fault moves emit fault + probe steps + recovery together
+    so every injected fault is followed by its full recovery arc); it
+    may also mutate ``traffic`` — that's how hot-set rotation works.
+    ``applies(plane)`` gates the move per architecture; ``weight``
+    biases random selection; ``chaos=True`` marks a fault-injection
+    move, excluded from plain schedules (so the long-standing
+    conformance schedules stay byte-identical) and included only when
+    the caller asks for a chaos schedule."""
     _MOVES[name] = {"factory": factory,
                     "applies": applies or (lambda plane: True),
-                    "weight": weight}
+                    "weight": weight,
+                    "chaos": bool(chaos)}
 
 
-def churn_moves(plane: ArchPlane) -> List[str]:
+def churn_moves(plane: ArchPlane, chaos: bool = False) -> List[str]:
     """Registered move names applicable to ``plane``, in registration
-    order (deterministic — dicts preserve insertion order)."""
-    return [n for n, m in _MOVES.items() if m["applies"](plane)]
+    order (deterministic — dicts preserve insertion order).  Chaos
+    (fault-injection) moves are included only with ``chaos=True``."""
+    return [n for n, m in _MOVES.items()
+            if m["applies"](plane) and (chaos or not m.get("chaos"))]
 
 
 # ---- built-in moves -----------------------------------------------------
@@ -170,6 +188,49 @@ def _mv_ssm_warm(plane, rng, traffic):
                    "count": np.ones(rows, np.int32)}})
 
 
+# ---- chaos (fault-injection) moves --------------------------------------
+
+def _chaos_episode(fault: str, plane, rng, traffic,
+                   probe_steps: int = 3) -> List[ChurnEvent]:
+    """One fault's full arc: arm the fault, serve the step it fires on
+    (the chaos driver retries it through the degraded path), serve
+    enough further steps for the recovery probe, then drive the
+    health-gated re-specialization, then prove the recovered plane
+    serves.  Emitted as a LIST so schedule generation keeps the arc
+    contiguous."""
+    ev = [ChurnEvent("chaos_fault", {"fault": fault})]
+    for _ in range(probe_steps):
+        ev.append(_step_event(plane, rng, traffic))
+    ev.append(ChurnEvent("schedule_recovery", {}))
+    ev.append(_step_event(plane, rng, traffic))
+    return ev
+
+
+def _mv_chaos_step_fault(plane, rng, traffic):
+    """An executable raising mid-step (simulated XLA error / OOM)."""
+    return _chaos_episode("step", plane, rng, traffic)
+
+
+def _mv_chaos_device_loss(plane, rng, traffic):
+    """A device dropping out mid-step: mesh shrink + state handoff."""
+    return _chaos_episode("device_loss", plane, rng, traffic)
+
+
+def _mv_chaos_compile_fault(plane, rng, traffic):
+    """A recompile cycle failing: the scheduler's backoff retry must
+    absorb it (one armed failure < max_retries) with serving unharmed."""
+    return [ChurnEvent("chaos_fault", {"fault": "compile", "n": 1}),
+            _step_event(plane, rng, traffic),
+            ChurnEvent("schedule_recovery", {}),
+            _step_event(plane, rng, traffic)]
+
+
+def _mv_chaos_straggler(plane, rng, traffic):
+    """A straggler stall: synthetic slow-window observations trip the
+    StragglerMonitor, whose mitigation degrades the plane."""
+    return _chaos_episode("straggler", plane, rng, traffic)
+
+
 register_churn_move("update_req_class", _mv_update_req_class)
 register_churn_move("update_vocab", _mv_update_vocab)
 register_churn_move("update_cross", _mv_update_cross,
@@ -181,6 +242,14 @@ register_churn_move("ssm_flush", _mv_ssm_flush,
                     applies=lambda p: p.has_ssm)
 register_churn_move("ssm_warm", _mv_ssm_warm,
                     applies=lambda p: p.has_ssm)
+register_churn_move("chaos_step_fault", _mv_chaos_step_fault,
+                    chaos=True)
+register_churn_move("chaos_device_loss", _mv_chaos_device_loss,
+                    chaos=True)
+register_churn_move("chaos_compile_fault", _mv_chaos_compile_fault,
+                    chaos=True)
+register_churn_move("chaos_straggler", _mv_chaos_straggler,
+                    chaos=True)
 
 
 # ---- schedule generation ------------------------------------------------
@@ -192,7 +261,8 @@ def _step_event(plane, rng, traffic):
 
 
 def generate_schedule(plane: ArchPlane, seed: int = 0,
-                      n_events: int = 60) -> List[ChurnEvent]:
+                      n_events: int = 60,
+                      chaos: bool = False) -> List[ChurnEvent]:
     """A deterministic ≥``n_events`` churn schedule for ``plane``.
 
     Structure: a warmup run of steps (fills the sketches) and a first
@@ -201,17 +271,23 @@ def generate_schedule(plane: ArchPlane, seed: int = 0,
     injected mispredicts, each immediately followed by a step (so the
     guard's deopt is observable); periodic recompiles; and a final
     recompile followed by steps, so the terminal plan is exercised too.
+    With ``chaos=True`` the fault-injection moves join the pool — each
+    fires as a contiguous episode (fault, probe steps, health-gated
+    recovery) and, like every move, at least once per schedule.
     """
     rng = np.random.default_rng(seed)
     traffic = TrafficState()
     ev: List[ChurnEvent] = []
+
+    def extend(e) -> None:
+        ev.extend(e if isinstance(e, list) else [e])
 
     warmup = 8
     for _ in range(warmup):
         ev.append(_step_event(plane, rng, traffic))
     ev.append(ChurnEvent("recompile", {}))
 
-    names = churn_moves(plane)
+    names = churn_moves(plane, chaos=chaos)
     weights = np.array([_MOVES[n]["weight"] for n in names], np.float64)
     weights = weights / weights.sum()
     pending = list(names)          # each applicable move >= once
@@ -235,13 +311,13 @@ def generate_schedule(plane: ArchPlane, seed: int = 0,
                     str(rng.choice(names, p=weights)))
             e = _MOVES[name]["factory"](plane, rng, traffic)
             if e is not None:
-                ev.append(e)
+                extend(e)
                 continue
         ev.append(_step_event(plane, rng, traffic))
     for name in pending:           # any move the body never reached
         e = _MOVES[name]["factory"](plane, rng, traffic)
         if e is not None:
-            ev.append(e)
+            extend(e)
     while mispredicts:
         ev.append(ChurnEvent("inject_mispredict", {}))
         ev.append(_step_event(plane, rng, traffic))

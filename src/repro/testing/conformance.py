@@ -111,13 +111,17 @@ def _assert_tables_equal(spec_rt, oracle_rt, where: str) -> None:
 class _Pair:
     """The two lock-stepped runtimes + the mirroring discipline."""
 
-    def __init__(self, plane: ArchPlane, seed: int):
+    def __init__(self, plane: ArchPlane, seed: int, controller=None):
         self.plane = plane
         example = make_batch(plane, np.random.default_rng(seed + 999))
         step = make_step(plane)
+        # chaos runs hand the SPEC side an explicit controller (health
+        # state machine + retrying scheduler); the oracle stays on its
+        # private one — faults are never injected on the oracle
         self.spec = MorpheusRuntime(
             step, build_tables(plane, seed), build_params(plane, seed),
-            example, conformance_engine_config(plane))
+            example, conformance_engine_config(plane),
+            controller=controller)
         self.oracle = MorpheusRuntime(
             step, build_tables(plane, seed), build_params(plane, seed),
             example,

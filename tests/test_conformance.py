@@ -35,8 +35,9 @@ import pytest
 import repro
 from repro.configs import ARCH_IDS
 from repro.testing import (build_plane, generate_schedule,
-                           register_churn_move, run_conformance,
-                           run_fingerprints)
+                           register_churn_move, run_chaos,
+                           run_conformance, run_fingerprints)
+from repro.testing.chaos import CHAOS_MODES, FAULT_KINDS
 from repro.testing.churn import _MOVES, ChurnEvent, churn_moves
 from repro.testing.conformance import MODES
 
@@ -72,6 +73,70 @@ def test_conformance_cell(arch, mode):
     specialized = [(t, i) for t, i in report["impls_seen"]
                    if i != "gather"]
     assert specialized, report["impls_seen"]
+
+
+# ---------------------------------------------------------------------------
+# chaos: fault-injected degraded-mode serving vs the generic oracle
+# ---------------------------------------------------------------------------
+
+# The tier-1 chaos subset: both chaos serving modes on the quick arch.
+# Full CI (CONFORMANCE_FULL=1) runs every arch through both modes.
+CHAOS_QUICK = (("llama3-8b", "plain"), ("llama3-8b", "frontend"))
+
+CHAOS_CELLS = (tuple((a, m) for a in ARCH_IDS for m in CHAOS_MODES)
+               if FULL else CHAOS_QUICK)
+
+
+@pytest.mark.parametrize(
+    "arch,mode", CHAOS_CELLS,
+    ids=[f"chaos-{a}-{m}" for a, m in CHAOS_CELLS])
+def test_chaos_cell(arch, mode):
+    """Fault-injected churn: run_chaos already raised on any byte
+    divergence, unaccounted request loss, failed recovery, or a
+    terminal plane that never re-specialized — the report proves the
+    run injected every fault type and recovered from each."""
+    report = run_chaos(arch, mode, seed=0, n_events=70)
+    assert set(report["faults"]) == set(FAULT_KINDS)
+    assert report["recovery_arcs"] >= len(FAULT_KINDS)
+    assert report["final_state"] == "healthy"
+    assert report["compares"] >= 10
+    if mode == "plain":
+        # at least one faulted step was retried byte-identically
+        # through the degraded generic path
+        assert report["retried_steps"] >= 1
+    else:
+        # the degraded plane rejected explicitly, never silently
+        assert report["rejected_degraded"] >= 1
+    specialized = [(t, i) for t, i in report["impls_seen"]
+                   if i != "gather"]
+    assert specialized, report["impls_seen"]
+
+
+def test_chaos_moves_are_fenced_out_of_plain_schedules():
+    """Chaos moves must not perturb the long-standing plain schedules
+    (cross-process determinism rests on them); with chaos=True every
+    fault kind fires as a contiguous fault->steps->recovery episode."""
+    plane = build_plane("llama3-8b")
+    plain_kinds = {e.kind for e in generate_schedule(plane, seed=3)}
+    assert "chaos_fault" not in plain_kinds
+    assert "schedule_recovery" not in plain_kinds
+
+    s1 = generate_schedule(plane, seed=3, chaos=True)
+    s2 = generate_schedule(plane, seed=3, chaos=True)
+    assert [e.kind for e in s1] == [e.kind for e in s2]
+    kinds = [e.kind for e in s1]
+    faults = [e.payload["fault"] for e in s1 if e.kind == "chaos_fault"]
+    assert set(faults) >= set(FAULT_KINDS)
+    assert kinds.count("schedule_recovery") == kinds.count("chaos_fault")
+    # each episode is contiguous: only steps between a fault and its
+    # recovery, so every fault's full arc is exercised before any other
+    # control churn lands
+    for i, k in enumerate(kinds):
+        if k == "chaos_fault":
+            j = i + 1
+            while kinds[j] == "step":
+                j += 1
+            assert kinds[j] == "schedule_recovery", (i, kinds[i:j + 1])
 
 
 # ---------------------------------------------------------------------------

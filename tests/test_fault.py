@@ -1,0 +1,127 @@
+"""The fault-tolerance primitives in ``repro.distributed.fault``.
+
+Deeper coverage than the smoke assertions in test_substrate.py: the
+injector's one-shot ``arm_next`` queue (ordering, custom exception
+types, precedence over step-numbered faults), seeded probabilistic
+failure determinism, the straggler monitor's warmup / suspect-decay /
+window semantics, the simulated-failure exception hierarchy the
+runtime's fault boundary dispatches on, and the ``elastic_reshard``
+checkpoint round-trip.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.checkpoint import save
+from repro.distributed.fault import (FailureInjector,
+                                     SimulatedCompileFailure,
+                                     SimulatedDeviceLoss,
+                                     SimulatedFailure, StragglerMonitor,
+                                     elastic_reshard)
+
+
+# ---------------------------------------------------------------------------
+# FailureInjector
+# ---------------------------------------------------------------------------
+
+def test_exception_hierarchy_dispatches_device_loss():
+    """The runtime's fault boundary isinstance-checks device loss; both
+    injected kinds must stay SimulatedFailure so one except clause
+    catches the whole family."""
+    assert issubclass(SimulatedDeviceLoss, SimulatedFailure)
+    assert issubclass(SimulatedCompileFailure, SimulatedFailure)
+    assert issubclass(SimulatedFailure, RuntimeError)
+
+
+def test_arm_next_fires_once_in_fifo_order():
+    inj = FailureInjector()
+    inj.check(0)                         # nothing armed: quiet
+    inj.arm_next(SimulatedDeviceLoss("first"))
+    inj.arm_next()                       # default SimulatedFailure
+    with pytest.raises(SimulatedDeviceLoss, match="first"):
+        inj.check(1)
+    with pytest.raises(SimulatedFailure, match="armed failure"):
+        inj.check(1)                     # same step: queue, not step no.
+    inj.check(2)                         # drained: quiet again
+
+
+def test_arm_next_takes_precedence_over_step_numbered_fault():
+    inj = FailureInjector(fail_at_step=4)
+    inj.arm_next(SimulatedCompileFailure("armed"))
+    with pytest.raises(SimulatedCompileFailure):
+        inj.check(4)                     # armed fault fires first
+    with pytest.raises(SimulatedFailure, match="step 4"):
+        inj.check(4)                     # then the step-numbered one
+
+
+def test_probabilistic_failures_are_seed_deterministic():
+    def fail_steps(seed):
+        inj = FailureInjector(fail_prob=0.3, seed=seed)
+        hit = []
+        for s in range(200):
+            try:
+                inj.check(s)
+            except SimulatedFailure:
+                hit.append(s)
+        return hit
+
+    a, b = fail_steps(7), fail_steps(7)
+    assert a == b and len(a) > 20        # same seed => same trace
+    assert fail_steps(8) != a            # different seed => different
+
+
+# ---------------------------------------------------------------------------
+# StragglerMonitor
+# ---------------------------------------------------------------------------
+
+def test_straggler_needs_warmup_samples():
+    mon = StragglerMonitor(threshold=2.0, patience=1)
+    for s in range(7):                   # < 8 samples: no median yet
+        assert not mon.observe(s, 10.0)
+    assert mon.events == []
+
+
+def test_straggler_patience_and_suspect_decay():
+    mon = StragglerMonitor(threshold=2.0, patience=2)
+    for s in range(8):
+        mon.observe(s, 0.1)
+    assert not mon.observe(8, 0.5)       # suspect 1 < patience
+    assert not mon.observe(9, 0.1)       # healthy step decays suspicion
+    assert not mon.observe(10, 0.5)      # suspect 1 again...
+    assert mon.observe(11, 0.5)          # ...suspect 2: mitigation fires
+    assert len(mon.events) == 3          # every suspect step recorded
+    # the counter reset on firing: the next stall starts a fresh streak
+    assert not mon.observe(12, 0.5)
+
+
+def test_straggler_rolling_window_adapts_median():
+    """A persistently slower regime becomes the new normal once the
+    rolling window fills with it — the monitor flags *relative* stalls,
+    not absolute latency."""
+    fired = []
+    mon = StragglerMonitor(threshold=2.0, patience=1, window=8,
+                           on_straggler=lambda s, t: fired.append(s))
+    for s in range(8):
+        mon.observe(s, 0.1)
+    assert mon.observe(8, 0.3)           # 3x the old median: straggler
+    assert fired == [8]
+    for s in range(9, 18):               # window refills at 0.3
+        mon.observe(s, 0.3)
+    assert not mon.observe(18, 0.5)      # < 2x the NEW median: normal
+
+
+# ---------------------------------------------------------------------------
+# elastic_reshard
+# ---------------------------------------------------------------------------
+
+def test_elastic_reshard_round_trips_onto_new_shardings(tmp_path):
+    tree = {"w": np.arange(32, dtype=np.float32).reshape(8, 4),
+            "b": np.ones(4, np.float32)}
+    save(str(tmp_path), 3, tree)
+    sh = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    shardings = {"w": sh, "b": sh}
+    out, meta = elastic_reshard(str(tmp_path), tree, shardings)
+    np.testing.assert_array_equal(np.asarray(out["w"]), tree["w"])
+    np.testing.assert_array_equal(np.asarray(out["b"]), tree["b"])
+    assert out["w"].sharding == sh       # placed onto the new sharding
