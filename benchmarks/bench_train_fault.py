@@ -1,0 +1,243 @@
+"""Elastic-training fault benchmark — the train loop's survival costs.
+
+Measures the robustness machinery ``repro.training.TrainSupervisor``
+puts around the train step:
+
+  * ``resume``     crash -> restore -> first step back.  Split into the
+                   checkpoint restore and the first-step barrier (which
+                   includes waiting for the background revalidation
+                   compile of the checkpointed plan).  The acceptance
+                   metric mirrors bench_fault: ZERO training-thread
+                   specialization compiles inside the resume window —
+                   the bench asserts ``sync_compiles == 1`` (the
+                   constructor's resident generic is the only inline
+                   compile of the whole run).
+  * ``degraded``   steady-state generic (post-fault) step time vs the
+                   healthy specialized step — the price of surviving on
+                   the deopt target.
+  * ``recover``    the device-loss arc end to end: the faulted step
+                   (snapshot + mesh shrink + verified elastic reshard +
+                   new resident generic) and the time/steps until the
+                   plane is re-specialized again.
+
+``json_record()`` feeds ``BENCH_train_fault.json`` (written by
+``benchmarks/run.py`` and the CI train-chaos job).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.checkpoint import restore, save
+from repro.configs import get_config
+from repro.data import DataConfig, TokenPipeline
+from repro.distributed.fault import FailureInjector, SimulatedDeviceLoss
+from repro.models import Model
+from repro.optim import AdamWConfig
+from repro.testing.chaos import chaos_health_config
+from repro.training import SupervisorConfig, TrainSupervisor
+
+from ._util import emit
+
+_LAST: dict = {}
+
+ARCH = "phi3.5-moe-42b-a6.6b"
+EVERY = 6
+
+
+def _cell(seed: int, steps: int):
+    cfg = get_config(ARCH).smoke()
+    model = Model(cfg)
+    dcfg = DataConfig(vocab=cfg.vocab, seq=32, global_batch=4, seed=seed,
+                      media_tokens=cfg.num_media_tokens,
+                      d_model=cfg.d_model, enc_seq=0)
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=steps)
+    scfg = SupervisorConfig(respecialize_every=EVERY, hot_coverage=0.7,
+                            health=chaos_health_config("plain"))
+
+    def make_sup(injector=None, ckpt_dir=None):
+        from repro.launch.train import build_state
+        state, _ = build_state(model, jax.random.PRNGKey(seed))
+        sup = TrainSupervisor(model, opt_cfg, state,
+                              TokenPipeline(dcfg).peek_batch(), cfg=scfg,
+                              injector=injector, ckpt_dir=ckpt_dir,
+                              log_fn=lambda m: None)
+        return sup, state
+
+    return dcfg, make_sup
+
+
+def _timed_step(sup, state, batch):
+    t0 = time.perf_counter()
+    state, m = sup.step(state, batch)
+    jax.block_until_ready(m["loss"])
+    return state, m, time.perf_counter() - t0
+
+
+def _median_ms(sup, state, pipe, n):
+    ts = []
+    for _ in range(n):
+        state, _, dt = _timed_step(sup, state, pipe.next_batch())
+        ts.append(dt)
+    return state, float(np.median(ts) * 1e3)
+
+
+def run(tiny: bool = False) -> list:
+    n_steady = 4 if tiny else 10
+    total = 64
+    record: dict = {"config": {"tiny": tiny, "arch": ARCH,
+                               "respecialize_every": EVERY}}
+
+    # ---- phase 1: crash/resume -----------------------------------------
+    d = tempfile.mkdtemp(prefix="bench_train_fault_")
+    dcfg, make_sup = _cell(seed=0, steps=total)
+    try:
+        sup, state = make_sup(ckpt_dir=d)
+        pipe = TokenPipeline(dcfg)
+        crash_at = EVERY * 2 + 2          # past the first activation
+        for i in range(crash_at):
+            state, m = sup.step(state, pipe.next_batch())
+            if (i + 1) % EVERY == 0:
+                save(d, i + 1, state,
+                     meta={"data": pipe.state_dict(),
+                           "morpheus": sup.spec_meta()})
+        assert sup.active_plan.specialized, "never specialized pre-crash"
+        state, healthy_ms = _median_ms(sup, state, pipe, n_steady)
+        sup.close()
+        del state                         # the crash
+
+        sup, state = make_sup(ckpt_dir=d)
+        t0 = time.perf_counter()
+        state, meta = restore(d, None, state)
+        pipe = TokenPipeline(dcfg)
+        pipe.load_state_dict(meta["data"])
+        sup.restore_spec(meta.get("morpheus"), resume_step=meta["step"])
+        restore_ms = (time.perf_counter() - t0) * 1e3
+        # first step back: includes the barrier wait for the background
+        # revalidation compile of the checkpointed specialized plan
+        state, m, dt = _timed_step(sup, state, pipe.next_batch())
+        first_step_ms = dt * 1e3
+        s = sup.stats()
+        assert s["sync_compiles"] == 1, (
+            f"resume compiled on the training thread: "
+            f"sync_compiles={s['sync_compiles']}")
+        assert sup.active_plan.specialized, "resume did not revalidate"
+        state, resumed_ms = _median_ms(sup, state, pipe, n_steady)
+        record.update({
+            "healthy_specialized_step_ms": healthy_ms,
+            "resume_restore_ms": restore_ms,
+            "resume_first_step_ms": first_step_ms,
+            "resume_first_step_over_healthy":
+                first_step_ms / max(healthy_ms, 1e-9),
+            "resumed_specialized_step_ms": resumed_ms,
+            "resume_sync_compiles": s["sync_compiles"],
+            "resume_bg_compiles": s["bg_compiles"],
+            "resume_swap_wait_s": s["swap_wait_s"],
+        })
+        sup.close()
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+    # ---- phase 2: device loss + degraded serving + re-specialization ----
+    d = tempfile.mkdtemp(prefix="bench_train_fault_")
+    try:
+        dcfg, make_sup = _cell(seed=1, steps=total)
+        inj = FailureInjector()
+        sup, state = make_sup(injector=inj, ckpt_dir=d)
+        pipe = TokenPipeline(dcfg)
+        step = 0
+        while not sup.active_plan.specialized:
+            state, _ = sup.step(state, pipe.next_batch())
+            step += 1
+        state, healthy_ms = _median_ms(sup, state, pipe, n_steady)
+        step += n_steady
+
+        inj.arm_next(SimulatedDeviceLoss("bench device loss"))
+        state, m, dt = _timed_step(sup, state, pipe.next_batch())
+        step += 1
+        loss_step_ms = dt * 1e3           # snapshot + reshard + generic
+        assert not sup.active_plan.specialized
+        state, degraded_ms = _median_ms(sup, state, pipe, n_steady)
+        step += n_steady
+
+        t0 = time.perf_counter()
+        rec_steps = 0
+        while not sup.active_plan.specialized and step < total:
+            state, _ = sup.step(state, pipe.next_batch())
+            step += 1
+            rec_steps += 1
+        recovery_ms = (time.perf_counter() - t0) * 1e3
+        s = sup.stats()
+        assert s["reshard_verified"] == 1 and s["device_losses"] == 1
+        assert sup.active_plan.specialized, "never re-specialized"
+        record.update({
+            "device_loss_step_ms": loss_step_ms,
+            "degraded_generic_step_ms": degraded_ms,
+            "degraded_over_healthy":
+                degraded_ms / max(healthy_ms, 1e-9),
+            "respecialize_steps": rec_steps,
+            "respecialize_ms": recovery_ms,
+            "mesh_epoch": s["mesh_epoch"],
+            "post_loss_sync_compiles": s["sync_compiles"],
+        })
+        sup.close()
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+    rows = [
+        ("train_fault/healthy_specialized",
+         record["healthy_specialized_step_ms"] * 1e3,
+         f"degraded_ratio={record['degraded_over_healthy']:.2f}"),
+        ("train_fault/resume_restore",
+         record["resume_restore_ms"] * 1e3,
+         f"sync_compiles={record['resume_sync_compiles']}"),
+        ("train_fault/resume_first_step",
+         record["resume_first_step_ms"] * 1e3,
+         f"over_healthy="
+         f"{record['resume_first_step_over_healthy']:.2f}"
+         f";bg_compiles={record['resume_bg_compiles']}"),
+        ("train_fault/device_loss_step",
+         record["device_loss_step_ms"] * 1e3,
+         f"mesh_epoch={record['mesh_epoch']}"),
+        ("train_fault/degraded_generic",
+         record["degraded_generic_step_ms"] * 1e3,
+         f"over_healthy={record['degraded_over_healthy']:.2f}"),
+        ("train_fault/respecialize",
+         record["respecialize_ms"] * 1e3,
+         f"steps={record['respecialize_steps']}"),
+    ]
+    global _LAST
+    _LAST = record
+    return rows
+
+
+def json_record() -> dict:
+    """The machine-readable result of the last :func:`run` call —
+    written to ``BENCH_train_fault.json`` by ``run.py`` and the CI
+    train-chaos job."""
+    return dict(_LAST)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke configuration (fewer measured steps)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the machine-readable record here")
+    args = ap.parse_args(argv)
+    emit(run(tiny=args.tiny))
+    if args.json:
+        Path(args.json).write_text(json.dumps(json_record(), indent=2)
+                                   + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

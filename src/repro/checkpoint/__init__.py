@@ -1,1 +1,1 @@
-from .ckpt import latest_step, restore, save, save_async
+from .ckpt import CheckpointHandle, latest_step, restore, save, save_async

@@ -4,10 +4,27 @@ Layout:  <dir>/step_<N>/
             manifest.json       tree structure + dtypes + shapes + meta
             arrays.npz          flattened leaves keyed by path
 
-Writes go to ``<dir>/.tmp_<N>`` and are renamed into place — a crashed
-writer never corrupts the latest checkpoint (rename is atomic on POSIX).
+Writes go to ``<dir>/.tmp_<N>`` (``manifest.json`` written LAST, so its
+presence marks a complete write) and are swapped into place with two
+renames: an existing ``step_<N>`` is first renamed aside to
+``.old_<N>``, then the tmp dir is renamed in, then the old copy is
+deleted.  At every instant at least one COMPLETE copy of the step is on
+disk — a writer crashing anywhere in the sequence can never destroy the
+only copy (the old ``rmtree(final)``-then-rename scheme had exactly
+that window).  Interrupted writers leave ``.tmp_*``/``.old_*`` litter;
+:func:`latest_step` and :func:`restore` garbage-collect it — a complete
+orphan whose final dir is missing is *promoted* (the interrupted swap
+is finished), everything else is deleted.
+
 ``save_async`` snapshots to host memory synchronously (consistent view)
-and writes on a daemon thread so the train loop is not blocked.
+and writes on a daemon thread.  It returns a :class:`CheckpointHandle`
+whose ``join()`` re-raises any write error on the caller — a full disk
+must fail the train loop loudly, not leave it believing it
+checkpointed.
+
+``save(..., keep_last=N)`` prunes all but the newest N complete
+checkpoints after a successful write (default: keep everything), so
+long chaos/training runs do not grow disk without bound.
 
 Restore takes an optional target sharding tree: leaves are device_put
 against the NEW mesh, so a checkpoint taken on one mesh restores onto a
@@ -37,8 +54,45 @@ def _flatten(tree) -> Dict[str, Any]:
     return flat
 
 
-def save(ckpt_dir: str, step: int, tree, meta: Optional[Dict] = None
-         ) -> str:
+def _step_of(p: Path) -> Optional[int]:
+    try:
+        return int(p.name.split("_")[-1])
+    except ValueError:
+        return None
+
+
+def _gc_stale(ckpt_dir: Path) -> None:
+    """Finish or discard interrupted writers.  A ``.tmp_<N>``/``.old_<N>``
+    dir with a ``manifest.json`` (written last => complete) whose
+    ``step_<N>`` is missing is the survivor of a crash mid-swap: promote
+    it.  Everything else — incomplete writes, leftovers of completed
+    swaps — is deleted.  ``.tmp`` is promoted before ``.old`` is
+    examined, so when both are complete the newer content wins."""
+    if not ckpt_dir.exists():
+        return
+    for prefix in (".tmp_", ".old_"):
+        for p in sorted(ckpt_dir.glob(prefix + "*")):
+            step = _step_of(p)
+            if step is None:
+                continue
+            final = ckpt_dir / f"step_{step}"
+            complete = (p / "manifest.json").exists()
+            if final.exists() or not complete:
+                shutil.rmtree(p, ignore_errors=True)
+            else:
+                os.rename(p, final)
+
+
+def _apply_retention(ckpt_dir: Path, keep_last: int) -> None:
+    steps = sorted((s for s in (_step_of(p)
+                                for p in ckpt_dir.glob("step_*"))
+                    if s is not None))
+    for step in steps[:-keep_last] if keep_last else []:
+        shutil.rmtree(ckpt_dir / f"step_{step}", ignore_errors=True)
+
+
+def save(ckpt_dir: str, step: int, tree, meta: Optional[Dict] = None,
+         keep_last: Optional[int] = None) -> str:
     ckpt_dir = Path(ckpt_dir)
     tmp = ckpt_dir / f".tmp_{step}"
     final = ckpt_dir / f"step_{step}"
@@ -65,29 +119,82 @@ def save(ckpt_dir: str, step: int, tree, meta: Optional[Dict] = None
             v = v.view(np.uint16 if v.dtype.itemsize == 2 else np.uint8)
         store[k] = v
     np.savez(tmp / "arrays.npz", **store)
+    # manifest last: its presence marks the tmp dir complete
     (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    # two-rename swap: an existing final is set aside, never destroyed
+    # before the replacement is in place
+    old = None
     if final.exists():
-        shutil.rmtree(final)
+        old = ckpt_dir / f".old_{step}"
+        if old.exists():
+            shutil.rmtree(old)
+        os.rename(final, old)
     os.rename(tmp, final)
+    if old is not None:
+        shutil.rmtree(old, ignore_errors=True)
+    if keep_last is not None and keep_last > 0:
+        _apply_retention(ckpt_dir, keep_last)
     return str(final)
 
 
-def save_async(ckpt_dir: str, step: int, tree, meta: Optional[Dict] = None
-               ) -> threading.Thread:
-    """Snapshot device state synchronously, write on a daemon thread."""
+class CheckpointHandle:
+    """A pending async checkpoint write.  ``join()`` blocks for the
+    writer thread and RE-RAISES its exception — the caller finds out
+    about a failed write (full disk, permissions) instead of silently
+    training on without a checkpoint.  ``path()``/``join()`` return the
+    final checkpoint path on success."""
+
+    def __init__(self, fn, args, kwargs):
+        self.step = args[1]
+        self._result: Optional[str] = None
+        self._exc: Optional[BaseException] = None
+
+        def _run():
+            try:
+                self._result = fn(*args, **kwargs)
+            except BaseException as e:       # noqa: BLE001 — re-raised
+                self._exc = e                # on join()
+
+        self._thread = threading.Thread(
+            target=_run, daemon=True, name=f"ckpt-save-{self.step}")
+        self._thread.start()
+
+    def done(self) -> bool:
+        return not self._thread.is_alive()
+
+    def join(self, timeout: Optional[float] = None) -> Optional[str]:
+        """Wait for the write; re-raise its error.  Returns the final
+        checkpoint path, or None if ``timeout`` expired first."""
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            return None
+        if self._exc is not None:
+            raise self._exc
+        return self._result
+
+    def path(self) -> Optional[str]:
+        return self._result
+
+
+def save_async(ckpt_dir: str, step: int, tree,
+               meta: Optional[Dict] = None,
+               keep_last: Optional[int] = None) -> CheckpointHandle:
+    """Snapshot device state synchronously, write on a daemon thread.
+    The returned :class:`CheckpointHandle`'s ``join()`` re-raises write
+    errors — callers MUST join (the train driver does, before the next
+    async save and at exit) or risk losing failures."""
     host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
-    th = threading.Thread(target=save,
-                          args=(ckpt_dir, step, host_tree, meta),
-                          daemon=True)
-    th.start()
-    return th
+    return CheckpointHandle(save, (ckpt_dir, step, host_tree, meta),
+                            {"keep_last": keep_last})
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
     d = Path(ckpt_dir)
     if not d.exists():
         return None
-    steps = [int(p.name.split("_")[1]) for p in d.glob("step_*")]
+    _gc_stale(d)
+    steps = [s for s in (_step_of(p) for p in d.glob("step_*"))
+             if s is not None]
     return max(steps) if steps else None
 
 
@@ -96,6 +203,7 @@ def restore(ckpt_dir: str, step: Optional[int], example_tree,
     """Returns (tree, meta).  ``example_tree`` provides the structure;
     ``shardings`` (same structure, NamedSharding leaves) reshards onto the
     current mesh — checkpoints survive mesh resizes."""
+    _gc_stale(Path(ckpt_dir))
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:

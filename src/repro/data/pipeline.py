@@ -74,6 +74,16 @@ class TokenPipeline:
                 jnp.bfloat16)
         return batch
 
+    def peek_batch(self) -> Dict[str, jax.Array]:
+        """The batch ``next_batch`` would return, WITHOUT advancing the
+        stream — a shape/dtype example for AOT compilation (the
+        :class:`~repro.training.TrainSupervisor` lowers against it)."""
+        step = self.step
+        try:
+            return self.next_batch()
+        finally:
+            self.step = step
+
     def __iter__(self) -> Iterator[Dict[str, jax.Array]]:
         while True:
             yield self.next_batch()

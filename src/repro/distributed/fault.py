@@ -41,6 +41,15 @@ class SimulatedCompileFailure(SimulatedFailure):
     exercise the scheduler's backoff-retry / quarantine path."""
 
 
+class LostStepError(RuntimeError):
+    """A fault fired AFTER the step's donated input buffers were
+    consumed: the in-process fault boundary cannot retry (the optimizer
+    state is gone from device).  The driver must fall back to the
+    crash/resume path — restore the latest checkpoint and replay.  The
+    :class:`~repro.training.TrainSupervisor` raises this instead of
+    silently continuing from corrupt state."""
+
+
 @dataclass
 class FailureInjector:
     fail_at_step: Optional[int] = None

@@ -82,6 +82,21 @@ def set_moe_hot(hot: Optional[tuple]) -> None:
     _MOE_HOT = tuple(hot) if hot else None
 
 
+@contextlib.contextmanager
+def use_moe_hot(hot: Optional[tuple]):
+    """Scope the training hot-expert plan to one trace.  The supervisor
+    (``repro.training``) wraps every ``make_train_step`` trace in this
+    so concurrent compiles on different threads cannot observe each
+    other's plan — callers serialize traces (the supervisor's trace
+    lock); this restores the previous value even on error."""
+    prev = get_moe_hot()
+    set_moe_hot(hot)
+    try:
+        yield
+    finally:
+        set_moe_hot(prev)
+
+
 def get_policy() -> Optional[MeshPolicy]:
     return _CURRENT
 

@@ -11,8 +11,18 @@ from ..optim.adamw import AdamWConfig, adamw_update
 
 
 def make_train_step(model: Model, opt_cfg: AdamWConfig,
-                    microbatches: int = 1, grad_shardings=None):
+                    microbatches: int = 1, grad_shardings=None,
+                    hot_experts=None):
     """state = {"params": bf16 tree, "opt": {master,m,v,step}}.
+
+    ``hot_experts`` pins the MoE hot-expert plan for THIS step function
+    at trace time (``()`` forces the generic full dispatch, a tuple
+    traces the branch-injected hot path) instead of reading the
+    process-global ``meshctx.get_moe_hot()`` — the
+    :class:`~repro.training.TrainSupervisor` compiles specialized and
+    generic train steps concurrently from background threads, which a
+    global can't support.  ``None`` (default) preserves the legacy
+    global read.
 
     ``microbatches`` > 1 enables gradient accumulation: the global batch is
     scanned in K sequential microbatches, shrinking the remat-residual
@@ -41,6 +51,15 @@ def make_train_step(model: Model, opt_cfg: AdamWConfig,
         return jax.value_and_grad(pinned_loss, has_aux=True)(params, batch)
 
     def train_step(state, batch):
+        if hot_experts is not None:
+            # trace-time only: the context installs the plan for the
+            # duration of THIS trace (model code reads it in moe_ffn)
+            from ..distributed.meshctx import use_moe_hot
+            with use_moe_hot(tuple(hot_experts) or None):
+                return _train_step_body(state, batch)
+        return _train_step_body(state, batch)
+
+    def _train_step_body(state, batch):
         if microbatches == 1:
             (loss, metrics), grads = grad_fn(state["params"], batch)
         else:

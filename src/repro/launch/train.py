@@ -1,10 +1,30 @@
 """Training driver.
 
-CPU-runnable end-to-end: reduced configs of any assigned architecture, the
-real AdamW/train_step path, atomic+async checkpointing, failure injection
-with resume, and straggler monitoring.  On hardware the same driver runs
-the full configs under the production mesh (launch/mesh.py +
-distributed/sharding.py) — the dry-run proves those lower/compile.
+CPU-runnable end-to-end: reduced configs of any assigned architecture,
+the real AdamW/train_step path, atomic+async checkpointing, failure
+injection with resume, straggler monitoring — and, through
+:class:`~repro.training.TrainSupervisor`, the Morpheus robustness
+contract on the train step itself: hot-expert respecialization compiled
+off-thread and swapped at deterministic barriers, deopt to the resident
+generic step on fault or mispredict, checkpoint-coupled plan state
+(``--resume`` revalidates the active specialization with zero
+training-thread compiles), and a mid-run device-loss arc
+(``--device-loss-at-step``) that snapshots, shrinks the mesh, elastic-
+reshards and continues degraded while re-specializing in background.
+
+Fault taxonomy (see distributed/fault.py):
+
+  * ``--fail-at-step N`` — SIGKILL-equivalent *process crash*: the
+    exception escapes the driver; rerun with ``--resume`` restores the
+    latest atomic checkpoint and replays **bit-exactly** (the
+    supervisor's executable sequence is a deterministic function of the
+    trajectory, carried in checkpoint meta).
+  * ``--step-fault-at N`` — *in-process* fault at the supervisor's
+    boundary: deopts to generic, retries the same batch, never loses an
+    optimizer step; the run continues and re-specializes.
+  * ``--device-loss-at-step N`` — elastic arc: snapshot → mesh shrink →
+    reshard → degraded generic → background re-specialization;
+    ``--grow-back-after K`` grows the mesh back K steps later.
 
 Examples:
     python -m repro.launch.train --arch llama3-8b --smoke --steps 50
@@ -25,12 +45,12 @@ import numpy as np
 from ..checkpoint import latest_step, restore, save, save_async
 from ..configs import get_config
 from ..data import DataConfig, TokenPipeline
-from ..distributed.fault import FailureInjector, SimulatedFailure, \
-    StragglerMonitor
+from ..distributed.fault import FailureInjector, SimulatedDeviceLoss, \
+    SimulatedFailure, StragglerMonitor
 from ..models import Model, unzip
 from ..models.params import zip_axes
 from ..optim import AdamWConfig, init_opt_state
-from .steps import make_train_step
+from ..training import SupervisorConfig, TrainSupervisor
 
 
 def build_state(model: Model, key, abstract=False):
@@ -55,8 +75,22 @@ def main(argv=None) -> int:
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--ckpt-async", action="store_true")
+    ap.add_argument("--keep-last", type=int, default=None,
+                    help="retain only the newest N checkpoints "
+                    "(default: keep everything)")
     ap.add_argument("--resume", action="store_true")
-    ap.add_argument("--fail-at-step", type=int, default=None)
+    ap.add_argument("--fail-at-step", type=int, default=None,
+                    help="process-crash injection (escapes the driver; "
+                    "resume from the latest checkpoint)")
+    ap.add_argument("--step-fault-at", type=int, default=None,
+                    help="in-process fault at the supervisor boundary "
+                    "(deopt + retry, no lost step)")
+    ap.add_argument("--device-loss-at-step", type=int, default=None,
+                    help="simulate losing a device: snapshot + mesh "
+                    "shrink + elastic reshard + degraded continue")
+    ap.add_argument("--grow-back-after", type=int, default=None,
+                    help="grow the mesh back N steps after the device "
+                    "loss")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--respecialize-every", type=int, default=0,
@@ -87,78 +121,100 @@ def main(argv=None) -> int:
 
     opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
                           total_steps=args.steps)
-    train_step = jax.jit(make_train_step(model, opt_cfg,
-                                         microbatches=args.microbatches),
-                         donate_argnums=(0,))
+    ckpt_dir = args.ckpt_dir or f"/tmp/repro_ckpt_{cfg.name}"
+
+    # the supervisor owns the step executables: the resident generic is
+    # compiled here (the one training-thread compile of the run);
+    # specialized steps compile on its scheduler thread
+    fault_injector = FailureInjector(seed=args.seed)
+    sup = TrainSupervisor(
+        model, opt_cfg, state, pipe.peek_batch(),
+        cfg=SupervisorConfig(respecialize_every=args.respecialize_every,
+                             hot_coverage=args.hot_coverage,
+                             microbatches=args.microbatches),
+        injector=fault_injector, ckpt_dir=ckpt_dir,
+        meta_fn=lambda: {"arch": cfg.name},
+        log_fn=lambda m: print(f"[train] {m}", flush=True))
 
     start_step = 0
-    ckpt_dir = args.ckpt_dir or f"/tmp/repro_ckpt_{cfg.name}"
     if args.resume and latest_step(ckpt_dir) is not None:
         state, meta = restore(ckpt_dir, None, state)
         pipe.load_state_dict(meta["data"])
         start_step = meta["step"]
+        # revalidate-or-deopt: the checkpointed plan re-stages for
+        # activation at start_step and compiles in background — the
+        # first step waits at the barrier, the trainer never retraces
+        sup.restore_spec(meta.get("morpheus"), resume_step=start_step)
         print(f"[train] resumed from step {start_step}", flush=True)
 
-    injector = FailureInjector(fail_at_step=args.fail_at_step,
-                               seed=args.seed)
+    crash_injector = FailureInjector(fail_at_step=args.fail_at_step,
+                                     seed=args.seed)
     straggler = StragglerMonitor(
         on_straggler=lambda s, t: print(
             f"[train] straggler mitigation fired at step {s} "
             f"({t*1e3:.0f} ms)", flush=True))
 
-    pending = None
-    counts_acc = None
-    for step in range(start_step, args.steps):
-        injector.check(step)
-        t0 = time.time()
-        batch = pipe.next_batch()
-        state, metrics = train_step(state, batch)
-        loss = float(metrics["loss"])
-        dt = time.time() - t0
-        straggler.observe(step, dt)
+    def ckpt_meta():
+        return {"data": pipe.state_dict(), "arch": cfg.name,
+                "morpheus": sup.spec_meta()}
 
-        # Morpheus on the training backend: accumulate router statistics
-        # and swap in the hot-expert specialized step when a small set
-        # covers the traffic (exact semantics — lax.cond fallback on miss)
-        if args.respecialize_every and "expert_counts" in metrics:
-            c = np.asarray(metrics["expert_counts"]).reshape(
-                -1, cfg.moe.num_experts).sum(0)
-            counts_acc = c if counts_acc is None else counts_acc + c
-            if (step + 1) % args.respecialize_every == 0:
-                from ..distributed.meshctx import get_moe_hot, set_moe_hot
-                order = np.argsort(-counts_acc)
-                cum = np.cumsum(counts_acc[order]) / max(counts_acc.sum(),
-                                                         1)
-                n_hot = int(np.searchsorted(cum, args.hot_coverage) + 1)
-                hot = (tuple(int(e) for e in order[:n_hot])
-                       if n_hot < cfg.moe.num_experts else None)
-                if hot != get_moe_hot():
-                    set_moe_hot(hot)
-                    train_step = jax.jit(
-                        make_train_step(model, opt_cfg,
-                                        microbatches=args.microbatches),
-                        donate_argnums=(0,))
-                    print(f"[train] morpheus: swapped in hot-expert step "
-                          f"hot={hot}", flush=True)
-                counts_acc = None
-        if step % args.log_every == 0 or step == args.steps - 1:
-            print(f"[train] step={step} loss={loss:.4f} "
-                  f"gnorm={float(metrics['grad_norm']):.3f} "
-                  f"lr={float(metrics['lr']):.2e} {dt*1e3:.0f}ms",
-                  flush=True)
-        if not np.isfinite(loss):
-            print("[train] non-finite loss — aborting", flush=True)
-            return 2
-        if args.ckpt_every and (step + 1) % args.ckpt_every == 0:
-            meta = {"data": pipe.state_dict(), "arch": cfg.name}
-            if args.ckpt_async:
-                pending = save_async(ckpt_dir, step + 1, state, meta)
-            else:
-                save(ckpt_dir, step + 1, state, meta)
-    if pending is not None:
-        pending.join()
-    print(f"[train] done at step {args.steps}", flush=True)
-    return 0
+    pending = None
+    rc = 0
+    try:
+        for step in range(start_step, args.steps):
+            # process-crash injection: escapes the driver (the
+            # SIGKILL-equivalent arc — resume from the checkpoint)
+            crash_injector.check(step)
+            if args.step_fault_at is not None and step == args.step_fault_at:
+                fault_injector.arm_next(
+                    SimulatedFailure(f"injected failure at step {step}"))
+            if (args.device_loss_at_step is not None
+                    and step == args.device_loss_at_step):
+                fault_injector.arm_next(
+                    SimulatedDeviceLoss(f"device lost at step {step}"))
+            if (args.device_loss_at_step is not None
+                    and args.grow_back_after is not None
+                    and step == (args.device_loss_at_step
+                                 + args.grow_back_after)):
+                state = sup.recover_devices(state)
+            t0 = time.time()
+            batch = pipe.next_batch()
+            state, metrics = sup.step(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            straggler.observe(step, dt)
+
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"[train] step={step} loss={loss:.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.3f} "
+                      f"lr={float(metrics['lr']):.2e} {dt*1e3:.0f}ms",
+                      flush=True)
+            if not np.isfinite(loss):
+                print("[train] non-finite loss — aborting", flush=True)
+                return 2
+            if args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+                if pending is not None:
+                    pending.join()       # surface async write errors
+                if args.ckpt_async:      # before queuing the next one
+                    pending = save_async(ckpt_dir, step + 1, state,
+                                         ckpt_meta(),
+                                         keep_last=args.keep_last)
+                else:
+                    save(ckpt_dir, step + 1, state, ckpt_meta(),
+                         keep_last=args.keep_last)
+        if pending is not None:
+            pending.join()               # re-raises write failures —
+            pending = None               # a lost checkpoint fails loudly
+        print(f"[train] done at step {args.steps}", flush=True)
+    finally:
+        if pending is not None:
+            try:
+                pending.join(timeout=60.0)
+            except Exception as e:       # noqa: BLE001 — already failing
+                print(f"[train] async checkpoint write failed: {e}",
+                      flush=True)
+        sup.close()
+    return rc
 
 
 if __name__ == "__main__":

@@ -40,7 +40,8 @@ checkable across the whole config zoo:
 speedup and plan determinism to ``BENCH_archzoo.json``.
 """
 from .archzoo import ArchPlane, build_plane, conformance_engine_config
-from .chaos import CHAOS_MODES, FAULT_KINDS, run_chaos
+from .chaos import (CHAOS_MODES, FAULT_KINDS, TRAIN_SCENARIOS,
+                    run_chaos, run_train_chaos)
 from .churn import ChurnEvent, generate_schedule, register_churn_move
 from .conformance import ConformanceError, run_conformance
 from .fingerprint import plan_fingerprint, run_fingerprints
@@ -48,6 +49,7 @@ from .fingerprint import plan_fingerprint, run_fingerprints
 __all__ = [
     "ArchPlane", "build_plane", "conformance_engine_config",
     "CHAOS_MODES", "FAULT_KINDS", "run_chaos",
+    "TRAIN_SCENARIOS", "run_train_chaos",
     "ChurnEvent", "generate_schedule", "register_churn_move",
     "ConformanceError", "run_conformance",
     "plan_fingerprint", "run_fingerprints",

@@ -1,0 +1,290 @@
+"""Checkpoint layer tests: atomic two-rename swap (the save crash
+window), stale-writer GC, retention, async error propagation, bf16
+integer-view round-trip, elastic reshard onto shrunk AND grown meshes,
+and exact lr-schedule / data-stream position on resume."""
+import json
+import os
+import shutil
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointHandle, latest_step, restore,
+                              save, save_async)
+
+ENV = {**os.environ, "PYTHONPATH": "src"}
+
+
+def _tree():
+    return {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": jnp.ones((4,), jnp.bfloat16) * 1.5,
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+# ---- bf16 / ml_dtypes integer-view round-trip ---------------------------
+
+def test_bf16_roundtrip_bitwise(tmp_path):
+    """npz cannot store ml_dtypes natively; the integer-view detour must
+    round-trip every bit pattern — including NaN payloads and denormals,
+    which a float cast would destroy."""
+    import ml_dtypes
+    patterns = np.arange(0, 2**16, 7, dtype=np.uint16)  # spread of bf16
+    tree = {"x": jnp.asarray(patterns.view(ml_dtypes.bfloat16)),
+            "f8": jnp.asarray(
+                np.arange(0, 256, 3, dtype=np.uint8).view(
+                    ml_dtypes.float8_e4m3fn))}
+    save(tmp_path, 1, tree)
+    out, _ = restore(tmp_path, 1, tree)
+    assert out["x"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(out["x"]).view(np.uint16), patterns)
+    np.testing.assert_array_equal(
+        np.asarray(out["f8"]).view(np.uint8),
+        np.asarray(tree["f8"]).view(np.uint8))
+
+
+def test_meta_and_values_roundtrip(tmp_path):
+    tree = _tree()
+    save(tmp_path, 3, tree, meta={"lr": 0.125, "arch": "t"})
+    out, meta = restore(tmp_path, None, tree)
+    assert meta["step"] == 3 and meta["lr"] == 0.125
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+# ---- the save crash window ----------------------------------------------
+
+def test_overwrite_never_destroys_only_copy(tmp_path, monkeypatch):
+    """The old scheme did rmtree(final) BEFORE renaming the tmp dir in:
+    a crash between the two left ZERO copies.  The two-rename swap must
+    keep a complete copy on disk at every instant — simulate the worst
+    crash point by failing the tmp->final rename and check the original
+    checkpoint is still restorable."""
+    tree = _tree()
+    save(tmp_path, 5, tree)
+
+    real_rename = os.rename
+
+    def exploding_rename(src, dst):
+        if Path(src).name.startswith(".tmp_"):
+            raise OSError("simulated crash mid-swap")
+        return real_rename(src, dst)
+
+    monkeypatch.setattr(os, "rename", exploding_rename)
+    with pytest.raises(OSError, match="mid-swap"):
+        save(tmp_path, 5, {"w": jnp.zeros((3, 4)),
+                           "b": jnp.zeros((4,), jnp.bfloat16),
+                           "step": jnp.asarray(0, jnp.int32)})
+    monkeypatch.undo()
+
+    # the interrupted writer left litter; GC must recover a COMPLETE
+    # copy of step 5 — old content (set aside) or new (complete tmp)
+    assert latest_step(tmp_path) == 5
+    out, _ = restore(tmp_path, 5, tree)
+    assert np.asarray(out["step"]) in (0, 7)    # a complete copy, not mix
+    # and the litter is gone
+    assert not list(Path(tmp_path).glob(".tmp_*"))
+    assert not list(Path(tmp_path).glob(".old_*"))
+
+
+def test_gc_promotes_complete_orphan(tmp_path):
+    """A crash after tmp completion but before the swap leaves a
+    complete .tmp_<N> and no step_<N>: GC promotes it (the write is
+    finished, not discarded)."""
+    tree = _tree()
+    save(tmp_path, 2, tree)
+    os.rename(tmp_path / "step_2", tmp_path / ".tmp_9")
+    assert latest_step(tmp_path) == 9
+    out, meta = restore(tmp_path, 9, tree)
+    assert meta["step"] == 2          # manifest content survived intact
+    assert np.asarray(out["step"]) == 7
+
+
+def test_gc_deletes_incomplete_orphan(tmp_path):
+    """A .tmp_<N> without manifest.json (writer died mid-npz) is
+    garbage, never promoted."""
+    tree = _tree()
+    save(tmp_path, 1, tree)
+    half = tmp_path / ".tmp_4"
+    half.mkdir()
+    (half / "arrays.npz").write_bytes(b"truncated")
+    assert latest_step(tmp_path) == 1
+    assert not half.exists()
+
+
+def test_gc_prefers_tmp_over_old(tmp_path):
+    """Crash between the two renames: step_<N> was set aside to
+    .old_<N> and the complete .tmp_<N> never swapped in.  GC must
+    promote the NEWER content (.tmp) and drop .old."""
+    tree = _tree()
+    save(tmp_path, 6, tree)
+    os.rename(tmp_path / "step_6", tmp_path / ".old_6")
+    save(tmp_path, 6, {"w": jnp.zeros((3, 4)),
+                       "b": jnp.zeros((4,), jnp.bfloat16),
+                       "step": jnp.asarray(99, jnp.int32)})
+    os.rename(tmp_path / "step_6", tmp_path / ".tmp_6")
+    assert latest_step(tmp_path) == 6
+    out, _ = restore(tmp_path, 6, tree)
+    assert np.asarray(out["step"]) == 99
+    assert not (tmp_path / ".old_6").exists()
+
+
+# ---- retention ----------------------------------------------------------
+
+def test_keep_last_retention(tmp_path):
+    tree = _tree()
+    for s in (1, 2, 3, 4):
+        save(tmp_path, s, tree, keep_last=2)
+    steps = sorted(int(p.name.split("_")[1])
+                   for p in tmp_path.glob("step_*"))
+    assert steps == [3, 4]
+    # default keeps everything
+    for s in (5, 6):
+        save(tmp_path, s, tree)
+    steps = sorted(int(p.name.split("_")[1])
+                   for p in tmp_path.glob("step_*"))
+    assert steps == [3, 4, 5, 6]
+
+
+# ---- async handle -------------------------------------------------------
+
+def test_save_async_returns_handle(tmp_path):
+    tree = _tree()
+    h = save_async(tmp_path, 11, tree, meta={"k": 1}, keep_last=3)
+    assert isinstance(h, CheckpointHandle)
+    path = h.join(timeout=60)
+    assert path is not None and path.endswith("step_11")
+    assert h.done() and h.path() == path
+    assert latest_step(tmp_path) == 11
+
+
+def test_save_async_error_reraised_on_join(tmp_path):
+    """A failed background write (here: the target is a FILE, so mkdir
+    explodes) must re-raise on join() — the trainer fails loudly
+    instead of believing it checkpointed."""
+    target = tmp_path / "ckpt"
+    target.write_text("not a directory")
+    h = save_async(str(target), 1, _tree())
+    with pytest.raises(OSError):
+        h.join(timeout=60)
+    assert h.done() and h.path() is None
+
+
+# ---- elastic reshard: shrink AND grow -----------------------------------
+
+def _run_subprocess(code: str, devices: int = 8):
+    prog = (f"import os\n"
+            f"os.environ['XLA_FLAGS'] = "
+            f"'--xla_force_host_platform_device_count={devices}'\n"
+            + textwrap.dedent(code))
+    return subprocess.run([sys.executable, "-c", prog],
+                          capture_output=True, text=True, env=ENV,
+                          cwd=os.getcwd(), timeout=560)
+
+
+def test_elastic_reshard_shrink_and_grow(tmp_path):
+    """A checkpoint taken on a 4-device mesh restores bitwise onto a
+    2-device mesh (device loss) AND onto an 8-device mesh (grow-back),
+    with the leaves actually laid out on the new device sets."""
+    r = _run_subprocess(f"""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.checkpoint import save
+    from repro.distributed.fault import elastic_reshard
+
+    def mesh_over(n):
+        return jax.sharding.Mesh(np.array(jax.devices()[:n]), ("data",))
+
+    tree = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+             "b": (jnp.arange(8, dtype=jnp.float32) / 3).astype(
+                 jnp.bfloat16)}}
+    sh4 = NamedSharding(mesh_over(4), P("data"))
+    placed = jax.device_put(tree, {{k: sh4 for k in tree}})
+    save({str(tmp_path)!r}, 1, placed)
+
+    for n in (2, 8):                     # shrink, then grow
+        shn = NamedSharding(mesh_over(n), P("data"))
+        out, meta = elastic_reshard({str(tmp_path)!r}, tree,
+                                    {{k: shn for k in tree}})
+        assert meta["step"] == 1
+        for k in tree:
+            np.testing.assert_array_equal(
+                np.asarray(out[k], np.float32),
+                np.asarray(tree[k], np.float32))
+            assert len(out[k].sharding.device_set) == n, (k, n)
+    print("OK reshard")
+    """)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK reshard" in r.stdout
+
+
+# ---- resume position: lr schedule + data stream -------------------------
+
+def test_resume_restores_lr_step_and_pipeline_position(tmp_path):
+    """After resume, the NEXT optimizer update must use the exact lr the
+    uninterrupted run would have used (the schedule is driven by the
+    checkpointed opt.step, not a fresh counter), and the data pipeline
+    must emit the exact next batch of the stream."""
+    from repro.data import DataConfig, TokenPipeline
+    from repro.optim import AdamWConfig, adamw_update
+
+    cfg = AdamWConfig(lr=1e-2, warmup_steps=3, total_steps=10)
+    params = {"w": jnp.ones((4, 4), jnp.float32)}
+
+    def opt0():
+        return {"master": jax.tree.map(lambda p: p.astype(jnp.float32),
+                                       params),
+                "m": jax.tree.map(jnp.zeros_like, params),
+                "v": jax.tree.map(jnp.zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    grads = {"w": jnp.full((4, 4), 0.25, jnp.float32)}
+
+    # uninterrupted: 6 updates, record lr of update 6
+    p, opt = dict(params), opt0()
+    for _ in range(6):
+        p, opt, metrics = adamw_update(cfg, grads, opt)
+    lr_ref = float(metrics["lr"])
+    w_ref = np.asarray(p["w"])
+
+    # interrupted at 5, checkpointed, resumed, one more update
+    p, opt = dict(params), opt0()
+    for _ in range(5):
+        p, opt, _ = adamw_update(cfg, grads, opt)
+    save(tmp_path, 5, {"params": p, "opt": opt})
+    restored, _ = restore(tmp_path, 5, {"params": p, "opt": opt})
+    assert int(np.asarray(restored["opt"]["step"])) == 5
+    p2, opt2, metrics2 = adamw_update(cfg, grads, restored["opt"])
+    assert float(metrics2["lr"]) == lr_ref
+    np.testing.assert_array_equal(np.asarray(p2["w"]), w_ref)
+
+    # pipeline position: stream resumes at the exact next batch
+    dcfg = DataConfig(vocab=64, seq=8, global_batch=2, seed=3)
+    ref_pipe = TokenPipeline(dcfg)
+    for _ in range(5):
+        ref_pipe.next_batch()
+    sixth = ref_pipe.next_batch()
+
+    pipe = TokenPipeline(dcfg)
+    for _ in range(5):
+        pipe.next_batch()
+    sd = pipe.state_dict()
+    resumed = TokenPipeline(dcfg)
+    resumed.load_state_dict(sd)
+    got = resumed.next_batch()
+    for k in sixth:
+        np.testing.assert_array_equal(np.asarray(sixth[k]),
+                                      np.asarray(got[k]))
+    # peek does not advance the stream
+    resumed.load_state_dict(sd)
+    peeked = resumed.peek_batch()
+    np.testing.assert_array_equal(np.asarray(peeked["tokens"]),
+                                  np.asarray(sixth["tokens"]))
+    assert resumed.state_dict() == sd

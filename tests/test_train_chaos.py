@@ -1,0 +1,43 @@
+"""Training-plane chaos cells (see repro.testing.chaos, training
+section).  Each cell drives a real MoE smoke model through the
+TrainSupervisor under one injected fault class and asserts the
+robustness obligations:
+
+  crash_resume  bit-exact replay of the never-crashed trajectory after
+                a SIGKILL-equivalent crash + --resume, with zero
+                training-thread compiles at resume;
+  step_fault    deopt + same-batch retry, optimizer step counter
+                advances exactly once per batch, terminal
+                re-specialized;
+  device_loss   snapshot -> mesh shrink -> verified elastic reshard ->
+                degraded generic -> background re-specialization;
+  compile       bounded-backoff absorption of short bursts, signature
+                quarantine past max_retries, training survives both.
+
+The harness itself raises ConformanceError on any violated obligation;
+the assertions here pin the report shape."""
+import pytest
+
+from repro.testing import TRAIN_SCENARIOS, run_train_chaos
+
+
+@pytest.mark.parametrize("scenario", TRAIN_SCENARIOS,
+                         ids=[f"train-chaos-{s}" for s in TRAIN_SCENARIOS])
+def test_train_chaos_cell(scenario):
+    report = run_train_chaos(scenario, seed=0)
+    assert report["scenario"] == scenario
+    if scenario == "crash_resume":
+        assert report["bit_exact"] is True
+        # the one sync compile is the constructor's resident generic
+        assert report["resume_stats"]["sync_compiles"] == 1
+        assert report["resume_stats"]["bg_compiles"] >= 1
+    elif scenario == "step_fault":
+        assert report["stats"]["step_faults"] == 1
+        assert report["stats"]["respecialize_recoveries"] >= 1
+    elif scenario == "device_loss":
+        assert report["stats"]["device_losses"] == 1
+        assert report["stats"]["reshard_verified"] == 1
+        assert report["stats"]["mesh_epoch"] == 1
+    elif scenario == "compile":
+        assert report["absorbed_stats"]["quarantines"] == 0
+        assert report["quarantine_stats"]["quarantines"] == 1

@@ -1,0 +1,106 @@
+"""Unit layer of the training supervisor: plan signatures, the
+heavy-hitter decision function, profile checkpoint-coupling, and the
+cache-key anatomy that lets ExecutableCache.quarantine purge train
+executables.  The end-to-end arcs (bit-exact crash/resume, fault deopt,
+device loss, compile quarantine) live in tests/test_train_chaos.py."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.execcache import ExecutableCache
+from repro.training import (TrainPlan, TrainProfile, plan_hot_experts)
+
+
+# ---- TrainPlan ----------------------------------------------------------
+
+def test_plan_signature_is_version_free():
+    a = TrainPlan((0, 2), version=1)
+    b = TrainPlan((0, 2), version=9)
+    assert a.signature == b.signature == ("train", "hot", (0, 2))
+    assert TrainPlan(None).signature == ("train", "generic")
+    assert not TrainPlan(None).specialized and TrainPlan((1,)).specialized
+
+
+def test_plan_labels():
+    assert TrainPlan(None).label == "generic"
+    assert TrainPlan((2, 0)).label == "specialized(hot=2,0)"
+
+
+# ---- the decision function ----------------------------------------------
+
+def test_plan_hot_experts_coverage_prefix():
+    counts = np.array([100, 50, 10, 5])
+    assert plan_hot_experts(counts, 0.60) == (0,)
+    assert plan_hot_experts(counts, 0.90) == (0, 1)
+    assert plan_hot_experts(counts, 0.95) == (0, 1, 2)
+    # full-set prefix => no specialization win
+    assert plan_hot_experts(counts, 1.0) is None
+    assert plan_hot_experts(np.zeros(4), 0.9) is None
+
+
+def test_plan_hot_experts_deterministic_on_ties():
+    counts = np.array([10, 10, 10, 1])
+    a = plan_hot_experts(counts, 0.6)
+    for _ in range(10):
+        assert plan_hot_experts(counts.copy(), 0.6) == a
+
+
+def test_plan_hot_experts_sorted_canonical():
+    # canonical ascending order => one signature per hot SET
+    counts = np.array([1, 100, 2, 50])
+    assert plan_hot_experts(counts, 0.9) == (1, 3)
+
+
+# ---- TrainProfile checkpoint coupling -----------------------------------
+
+def test_profile_meta_roundtrip_exact_through_json():
+    p = TrainProfile(4)
+    p.observe(np.array([7, 1, 3, 9]), loss=2.5)
+    p.observe(np.array([2, 2, 2, 2]), loss=2.25)
+    meta = json.loads(json.dumps(p.to_meta()))   # the checkpoint detour
+    q = TrainProfile(4)
+    q.from_meta(meta)
+    np.testing.assert_array_equal(q.counts_acc, p.counts_acc)
+    assert q.steps_acc == p.steps_acc
+    assert q.mixture_ema == p.mixture_ema        # bitwise: repr floats
+    assert q.loss_ema == p.loss_ema
+    # identical future decisions — the bit-exact resume prerequisite
+    assert q.decide(0.7) == p.decide(0.7)
+
+
+def test_profile_decide_resets_accumulator():
+    p = TrainProfile(3)
+    p.observe(np.array([9, 1, 0]))
+    assert p.decide(0.8) == (0,)
+    assert p.counts_acc.sum() == 0 and p.steps_acc == 0
+    assert p.decide(0.8) is None                 # empty window => generic
+
+
+# ---- cache-key anatomy --------------------------------------------------
+
+def test_quarantine_purges_train_executables_by_signature():
+    """Train keys are built as (ns, (signature, ()), bkey, donate) — the
+    same anatomy the serving runtime uses, so the shared cache's
+    signature quarantine purges train executables too."""
+    cache = ExecutableCache(8)
+    sig_a = TrainPlan((0, 1)).signature
+    sig_b = TrainPlan(None).signature
+    ka = ExecutableCache.make_key("train/t@0", (sig_a, ()), "bk", True)
+    kb = ExecutableCache.make_key("train/t@0", (sig_b, ()), "bk", True)
+    cache.put(ka, "exe-a")
+    cache.put(kb, "exe-b")
+    cache.quarantine(sig_a)
+    assert cache.is_quarantined(sig_a)
+    assert cache.peek(ka) is None and cache.peek(kb) == "exe-b"
+
+
+def test_namespace_rotation_drops_old_topology():
+    cache = ExecutableCache(8)
+    sig = TrainPlan(None).signature
+    k0 = ExecutableCache.make_key("train/t@0", (sig, ()), "bk", True)
+    k1 = ExecutableCache.make_key("train/t@1", (sig, ()), "bk", True)
+    cache.put(k0, "epoch0")
+    cache.put(k1, "epoch1")
+    assert cache.purge_namespace("train/t@0") == 1
+    assert cache.peek(k0) is None and cache.peek(k1) == "epoch1"
